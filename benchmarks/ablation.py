@@ -1,0 +1,115 @@
+"""Fig 11: memory-restore ablation — start from a CRIU-like configuration
+and enable Spice's optimizations one at a time on the py-rnn function."""
+from __future__ import annotations
+
+import tempfile
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import bench_config
+from repro.core import (
+    BaseImage,
+    BufferPool,
+    NodeImageCache,
+    SpiceRestorer,
+    snapshot,
+)
+from repro.core import baselines
+from repro.core.trace import static_access_order
+from repro.models import lm
+from repro.serve.engine import layerwise_state
+
+
+def _best(f, n=3):
+    best = float("inf")
+    for _ in range(n):
+        best = min(best, f())
+    return best
+
+
+def run() -> list:
+    cfg = bench_config("mamba2-780m")
+    params = lm.init_params(cfg, jax.random.PRNGKey(17), jnp.float32)
+    state = layerwise_state(cfg, params)
+    # perturb a couple of layers so there is a private set over the base
+    state["layers"][0] = jax.tree.map(lambda a: np.asarray(a) + 0.1, state["layers"][0])
+    base_state = layerwise_state(cfg, lm.init_params(cfg, jax.random.PRNGKey(17), jnp.float32))
+    order = static_access_order(cfg, state)
+
+    rows = []
+    with tempfile.TemporaryDirectory() as d:
+        cache = NodeImageCache()
+        cache.put(BaseImage.from_state("base", base_state))
+
+        # 0. per-resource files, eager, no dedup (CRIU*-like floor)
+        baselines.criu_star_snapshot(state, f"{d}/criu")
+
+        def t0():
+            t = time.perf_counter()
+            baselines.criu_star_restore(f"{d}/criu")
+            return time.perf_counter() - t
+
+        rows.append(("ablation/0_per_resource_replay", _best(t0) * 1e6, ""))
+
+        # 1. + batched metadata + single contiguous file (JIF, no dedup,
+        #    no access order, sync, no pool)
+        snapshot(state, f"{d}/v1.jif")
+
+        def t1():
+            r = SpiceRestorer(pool=BufferPool(capacity_bytes=0), pipelined=False)
+            t = time.perf_counter()
+            r.restore(f"{d}/v1.jif")
+            return time.perf_counter() - t
+
+        rows.append(("ablation/1_jif_batched_metadata", _best(t1) * 1e6, ""))
+
+        # 2. + overlay dedup vs base + zero elision (fetch less)
+        snapshot(state, f"{d}/v2.jif", base=cache.get("base"))
+
+        def t2():
+            r = SpiceRestorer(
+                pool=BufferPool(capacity_bytes=0), node_cache=cache, pipelined=False
+            )
+            t = time.perf_counter()
+            r.restore(f"{d}/v2.jif")
+            return time.perf_counter() - t
+
+        rows.append(("ablation/2_overlay_dedup_zero_elide", _best(t2) * 1e6, ""))
+
+        # 3. + access-order relocation (sequential working-set read)
+        snapshot(state, f"{d}/v3.jif", base=cache.get("base"), access_order=order)
+
+        def t3():
+            r = SpiceRestorer(
+                pool=BufferPool(capacity_bytes=0), node_cache=cache, pipelined=False
+            )
+            t = time.perf_counter()
+            r.restore(f"{d}/v3.jif")
+            return time.perf_counter() - t
+
+        rows.append(("ablation/3_access_order_layout", _best(t3) * 1e6, ""))
+
+        # 4. + buffer/zero pool (allocation off the critical path)
+        pool = BufferPool()
+        SpiceRestorer(pool=pool, node_cache=cache).restore(f"{d}/v3.jif")  # prime
+
+        def t4():
+            r = SpiceRestorer(pool=pool, node_cache=cache, pipelined=False)
+            t = time.perf_counter()
+            _, _, _, st = r.restore(f"{d}/v3.jif")
+            return time.perf_counter() - t
+
+        rows.append(("ablation/4_zero_page_pool", _best(t4) * 1e6, ""))
+
+        # 5. + pipelined prefetch (overlap metadata/base fill with I/O)
+        def t5():
+            r = SpiceRestorer(pool=pool, node_cache=cache, pipelined=True)
+            t = time.perf_counter()
+            r.restore(f"{d}/v3.jif")
+            return time.perf_counter() - t
+
+        rows.append(("ablation/5_pipelined_prefetch", _best(t5) * 1e6, ""))
+    return rows

@@ -1,0 +1,55 @@
+"""Fig 12: maximum invocation latency under a burst of concurrent cold
+restores of the same function: spice vs spice(no pool) vs userspace-only
+(criu*-style)."""
+from __future__ import annotations
+
+import threading
+import time
+
+import numpy as np
+
+from benchmarks.common import PROMPT, build_zoo, fn_config
+from repro.core import BufferPool
+
+
+def _burst(node, fname, cfg, mode, n, pool_capacity=None):
+    if pool_capacity is not None:
+        node.pool = BufferPool(capacity_bytes=pool_capacity)
+        # prime the pool so acquisition is off the critical path
+        if pool_capacity:
+            node.invoke(fname, PROMPT, max_new_tokens=2, mode=mode, cfg=cfg)
+    node.evict()
+    lat = [0.0] * n
+
+    def one(i):
+        t0 = time.perf_counter()
+        node.invoke(fname, PROMPT, max_new_tokens=2, mode=mode, cfg=cfg)
+        lat[i] = time.perf_counter() - t0
+
+    ths = [threading.Thread(target=one, args=(i,)) for i in range(n)]
+    for t in ths:
+        t.start()
+    for t in ths:
+        t.join()
+    return max(lat)
+
+
+def run() -> list:
+    node = build_zoo()
+    fname = "py-json"
+    cfg = fn_config(fname)
+    node.invoke(fname, PROMPT, max_new_tokens=2, mode="spice_sync", cfg=cfg)  # compile
+    rows = []
+    for n in [1, 2, 4, 8]:
+        rows.append(
+            (f"concurrency/{n}/spice", _burst(node, fname, cfg, "spice", n, 2 << 30) * 1e6, "")
+        )
+        rows.append(
+            (f"concurrency/{n}/spice_no_pool",
+             _burst(node, fname, cfg, "spice", n, 0) * 1e6, "")
+        )
+        rows.append(
+            (f"concurrency/{n}/userspace_criu",
+             _burst(node, fname, cfg, "criu_star", n) * 1e6, "")
+        )
+    return rows

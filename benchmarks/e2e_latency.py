@@ -1,0 +1,48 @@
+"""Fig 1/9: end-to-end cold-start invocation latency per restore system,
+vs a warm invocation, across the function zoo."""
+from __future__ import annotations
+
+from benchmarks.common import PROMPT, build_zoo, fn_config
+
+MODES = ["spice", "criu_star", "reap_star", "faasnap_star"]
+
+
+def run() -> list:
+    node = build_zoo()
+    rows = []
+    for fname in node.registry.names():
+        cfg = fn_config(fname)
+        # compile-cache warmup (the restored "JIT state"): one throwaway run
+        node.invoke(fname, PROMPT, max_new_tokens=4, mode="spice_sync", cfg=cfg)
+        for mode in MODES:
+            for bw, tag in [(None, ""), (2e9, "_simnvme")]:
+                node.evict()
+                best = float("inf")
+                for _ in range(3):
+                    node.evict()
+                    r = node.invoke(fname, PROMPT, max_new_tokens=4, mode=mode,
+                                    cfg=cfg, simulate_read_bw=bw)
+                    best = min(best, r.total_s)
+                rows.append((f"e2e_cold{tag}/{fname}/{mode}", best * 1e6, ""))
+        # warm comparison
+        node.evict()
+        node.registry.get(fname).warm_ttl_s = 60
+        node.invoke(fname, PROMPT, max_new_tokens=4, mode="spice", cfg=cfg)
+        r = node.invoke(fname, PROMPT, max_new_tokens=4, cfg=cfg)
+        rows.append((f"e2e_warm/{fname}/warm", r.total_s * 1e6, ""))
+        node.registry.get(fname).warm_ttl_s = 0
+        node.evict()
+    # derived: spice slowdown vs warm, speedup vs baselines
+    d = {n: v for n, v, _ in rows}
+    for fname in node.registry.names():
+        warm = d[f"e2e_warm/{fname}/warm"]
+        for tag in ["", "_simnvme"]:
+            spice = d[f"e2e_cold{tag}/{fname}/spice"]
+            criu = d[f"e2e_cold{tag}/{fname}/criu_star"]
+            reap = d[f"e2e_cold{tag}/{fname}/reap_star"]
+            faas = d[f"e2e_cold{tag}/{fname}/faasnap_star"]
+            rows.append((f"e2e_ratio{tag}/{fname}/spice_vs_warm", spice / warm, "x"))
+            rows.append((f"e2e_ratio{tag}/{fname}/criu_vs_spice", criu / spice, "x"))
+            rows.append((f"e2e_ratio{tag}/{fname}/reap_vs_spice", reap / spice, "x"))
+            rows.append((f"e2e_ratio{tag}/{fname}/faasnap_vs_spice", faas / spice, "x"))
+    return rows

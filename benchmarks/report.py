@@ -1,0 +1,98 @@
+"""Render EXPERIMENTS.md §Dry-run and §Roofline tables from the dry-run
+artifacts.
+
+  PYTHONPATH=src:. python -m benchmarks.report            # markdown to stdout
+  PYTHONPATH=src:. python -m benchmarks.report --tag x    # tagged variants
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+from pathlib import Path
+
+RESULTS = Path(__file__).resolve().parents[1] / "results" / "dryrun"
+
+
+def load(tag: str = ""):
+    cells = {}
+    for f in sorted(glob.glob(str(RESULTS / "*.json"))):
+        stem = Path(f).stem
+        parts = stem.split(".")
+        cell_tag = parts[1] if len(parts) > 1 else ""
+        if cell_tag != tag:
+            continue
+        d = json.load(open(f))
+        cells[d["cell"]] = d
+    return cells
+
+
+def fmt_bytes(b):
+    return f"{b/2**30:.2f}"
+
+
+def dryrun_table(cells) -> str:
+    lines = [
+        "| cell | mesh | compile_s | per-dev HBM model (GiB) | fits | HLO GFLOP/dev | coll MB/dev | collective mix |",
+        "|---|---|---|---|---|---|---|---|",
+    ]
+    for cid in sorted(cells):
+        d = cells[cid]
+        if "skipped" in d:
+            lines.append(f"| {cid} | {d['mesh']} | — | — | skip | — | — | {d['skipped'][:60]}… |")
+            continue
+        if "error" in d:
+            lines.append(f"| {cid} | — | — | — | ERR | — | — | {d['error'][:60]} |")
+            continue
+        m = d["memory"]["modeled"]
+        coll = d["collectives"]
+        mix = ",".join(
+            f"{k.replace('all-','a')[:7]}:{v/1e6:.0f}M"
+            for k, v in sorted(coll.items())
+            if k != "total" and v > 1e6
+        )
+        lines.append(
+            f"| {cid} | {d['mesh']} | {d['compile_s']} | "
+            f"{fmt_bytes(m['total_bytes'])} | {'Y' if m['fits_hbm'] else 'N'} | "
+            f"{d['cost']['flops_per_device']/1e9:.0f} | "
+            f"{coll.get('total',0)/1e6:.0f} | {mix} |"
+        )
+    return "\n".join(lines)
+
+
+def roofline_table(cells) -> str:
+    lines = [
+        "| cell | compute_s | memory_s | collective_s | dominant | MODEL_FLOPS | useful ratio | roofline frac |",
+        "|---|---|---|---|---|---|---|---|",
+    ]
+    for cid in sorted(cells):
+        d = cells[cid]
+        if "skipped" in d or "error" in d:
+            continue
+        r = d["roofline"]
+        lines.append(
+            f"| {cid} | {r['compute_s']:.4f} | {r['memory_s']:.4f} | "
+            f"{r['collective_s']:.4f} | {r['dominant'].replace('_s','')} | "
+            f"{r['model_flops']:.2e} | {r['useful_flop_ratio']:.2f} | "
+            f"{r['roofline_fraction']:.4f} |"
+        )
+    return "\n".join(lines)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--tag", default="")
+    ap.add_argument("--section", default="both", choices=["dryrun", "roofline", "both"])
+    args = ap.parse_args()
+    cells = load(args.tag)
+    if args.section in ("dryrun", "both"):
+        print("### Dry-run table\n")
+        print(dryrun_table(cells))
+        print()
+    if args.section in ("roofline", "both"):
+        print("### Roofline table\n")
+        print(roofline_table(cells))
+
+
+if __name__ == "__main__":
+    main()

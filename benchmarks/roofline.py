@@ -1,0 +1,38 @@
+"""Roofline table from the dry-run artifacts (EXPERIMENTS.md §Roofline
+reads this). Reports the three terms per (arch x shape x mesh) cell."""
+from __future__ import annotations
+
+import glob
+import json
+from pathlib import Path
+
+RESULTS = Path(__file__).resolve().parents[1] / "results" / "dryrun"
+
+
+def rows_from_disk():
+    out = []
+    for f in sorted(glob.glob(str(RESULTS / "*.json"))):
+        if ".hlo" in f or "." in Path(f).stem.replace(".json", "").split("__")[-1]:
+            pass
+        d = json.load(open(f))
+        if "skipped" in d or "error" in d or "roofline" not in d:
+            continue
+        out.append(d)
+    return out
+
+
+def run() -> list:
+    rows = []
+    for d in rows_from_disk():
+        r = d["roofline"]
+        rows.append(
+            (
+                f"roofline/{d['cell']}/bound_time",
+                r["bound_time_s"] * 1e6,
+                f"dominant={r['dominant']},useful={r['useful_flop_ratio']:.2f},"
+                f"fraction={r['roofline_fraction']:.4f},fits={d['memory']['fits_hbm']}",
+            )
+        )
+    if not rows:
+        rows.append(("roofline/none", 0.0, "run launch/dryrun first"))
+    return rows

@@ -1,0 +1,53 @@
+"""Benchmark harness — one module per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV. Module map:
+  e2e_latency       -> Fig 1 / Fig 9   (cold start vs systems vs warm)
+  metadata_restore  -> Fig 2 / Fig 10  (metadata restore + replay ops)
+  prefetch          -> Fig 4           (sync / advisory-async / guaranteed)
+  working_set       -> Fig 5 / Table 1 (shared/private/zero composition)
+  ablation          -> Fig 11          (restore optimizations, incremental)
+  concurrency       -> Fig 12 (+Fig 3 interference) (burst max latency)
+  roofline          -> EXPERIMENTS.md §Roofline (from dry-run artifacts)
+"""
+import argparse
+import sys
+import time
+import traceback
+
+MODULES = [
+    "e2e_latency",
+    "metadata_restore",
+    "prefetch",
+    "working_set",
+    "ablation",
+    "concurrency",
+    "roofline",
+]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None, help="comma-separated module list")
+    args = ap.parse_args()
+    mods = args.only.split(",") if args.only else MODULES
+
+    print("name,us_per_call,derived")
+    failures = 0
+    for name in mods:
+        t0 = time.time()
+        try:
+            mod = __import__(f"benchmarks.{name}", fromlist=["run"])
+            for row in mod.run():
+                n, us, derived = row
+                print(f"{n},{us:.1f},{derived}")
+        except Exception as e:
+            failures += 1
+            print(f"{name},nan,ERROR:{type(e).__name__}:{e}", flush=True)
+            traceback.print_exc(file=sys.stderr)
+        print(f"# {name} finished in {time.time()-t0:.1f}s", flush=True)
+    if failures:
+        raise SystemExit(f"{failures} benchmark modules failed")
+
+
+if __name__ == "__main__":
+    main()

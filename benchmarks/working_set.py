@@ -1,0 +1,37 @@
+"""Fig 5 / Table 1: working-set composition — private vs shared(base) vs
+zero chunk fractions per function snapshot."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import BENCH_DIR, FUNCTIONS, bench_config, build_zoo
+from repro.core.jif import JifReader
+from repro.core.overlay import KIND_BASE, KIND_PRIVATE, KIND_ZERO, IntervalTable
+
+
+def run() -> list:
+    build_zoo()
+    rows = []
+    for fname, arch in FUNCTIONS:
+        r = JifReader(str(BENCH_DIR / f"{fname}.jif"))
+        counts = {KIND_ZERO: 0, KIND_BASE: 0, KIND_PRIVATE: 0}
+        n_intervals = 0
+        for t in r.tensors:
+            it = r.itable(t.name)
+            n_intervals += len(it.table)
+            for k, v in it.counts().items():
+                counts[k] += v
+        total = sum(counts.values())
+        rows.append(
+            (
+                f"working_set/{fname}/shared_pct",
+                100.0 * counts[KIND_BASE] / total,
+                f"vmas={len(r.tensors)},delta_intervals={n_intervals},"
+                f"private={counts[KIND_PRIVATE]},zero={counts[KIND_ZERO]},"
+                f"ws_mb={total * r.page_size / 1e6:.1f}",
+            )
+        )
+        r.close()
+    return rows

@@ -1,0 +1,56 @@
+"""Overlay economics: N fine-tunes of one base model, snapshotted with
+overlay dedup — storage & restore I/O scale with the *delta*, not the model,
+and the node base-image cache serves the shared bytes from RAM.
+
+    PYTHONPATH=src python examples/overlay_finetunes.py
+"""
+import dataclasses
+import tempfile
+
+import jax
+import numpy as np
+
+from repro.configs import get_config
+from repro.core import BaseImage, NodeImageCache, SpiceRestorer, snapshot
+from repro.models import lm
+from repro.serve.engine import layerwise_state
+
+
+def main():
+    cfg = get_config("qwen1.5-0.5b").reduced()
+    cfg = dataclasses.replace(  # deep enough that delta fractions differ
+        cfg, pattern_reps=12, n_layers=12, d_model=256, d_ff=512, head_dim=32
+    )
+    base_params = lm.init_params(cfg, jax.random.PRNGKey(0))
+    base_state = layerwise_state(cfg, base_params)
+
+    cache = NodeImageCache()
+    cache.put(BaseImage.from_state("base", base_state))
+
+    with tempfile.TemporaryDirectory() as d:
+        print(f"{'finetune':>10} {'total_MB':>9} {'file_MB':>8} {'dedup':>6} {'restore_ms':>10}")
+        for i, frac in enumerate([0.05, 0.2, 0.5]):
+            # fine-tune the top `frac` of layers
+            ft = jax.tree.map(np.asarray, base_state)
+            cut = int(len(ft["layers"]) * (1 - frac))
+            for li in range(cut, len(ft["layers"])):
+                ft["layers"][li] = jax.tree.map(lambda a: a * 1.02, ft["layers"][li])
+
+            path = f"{d}/ft{i}.jif"
+            stats = snapshot(ft, path, base=cache.get("base"))
+
+            restorer = SpiceRestorer(node_cache=cache)
+            got, _, _, rstats = restorer.restore(path)
+            np.testing.assert_allclose(
+                got["layers"][-1]["mlp"]["w_down"], ft["layers"][-1]["mlp"]["w_down"]
+            )
+            print(
+                f"{f'{int(frac*100)}%-tuned':>10} "
+                f"{stats.total_bytes/1e6:9.1f} {stats.private_bytes/1e6:8.1f} "
+                f"{(1-stats.file_fraction)*100:5.1f}% {rstats.total_s*1e3:10.2f}"
+            )
+        print("\nbase-image cache:", cache.stats)
+
+
+if __name__ == "__main__":
+    main()

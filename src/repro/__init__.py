@@ -1,0 +1,5 @@
+"""SPICE-JAX: serverless model-instance cold starts through runtime
+co-design — a JAX/TPU reproduction of "Taming Serverless Cold Starts
+Through OS Co-Design" (2025). See DESIGN.md for the paper->TPU mapping."""
+
+__version__ = "0.1.0"

@@ -1,0 +1,33 @@
+"""The paper's primary contribution: snapshot/restore co-designed with the
+runtime — JIF container, overlay dedup, zero pool, node base-image cache,
+the Spice restore engine, and the baselines it is evaluated against."""
+from repro.core.cache import BaseImage, NodeImageCache
+from repro.core.overlay import (
+    DEFAULT_PAGE,
+    KIND_BASE,
+    KIND_PRIVATE,
+    KIND_ZERO,
+    IntervalTable,
+)
+from repro.core.pool import BufferPool
+from repro.core.restore import RestoreStats, SpiceRestorer, TensorHandle
+from repro.core.snapshot import SnapshotStats, snapshot
+from repro.core.registry import FunctionRegistry, FunctionSpec
+
+__all__ = [
+    "BaseImage",
+    "NodeImageCache",
+    "BufferPool",
+    "SpiceRestorer",
+    "TensorHandle",
+    "RestoreStats",
+    "snapshot",
+    "SnapshotStats",
+    "FunctionRegistry",
+    "FunctionSpec",
+    "IntervalTable",
+    "DEFAULT_PAGE",
+    "KIND_ZERO",
+    "KIND_BASE",
+    "KIND_PRIVATE",
+]

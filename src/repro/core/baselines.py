@@ -1,0 +1,212 @@
+"""Baseline restorers the paper compares against (faithfully re-implemented
+in the model-instance setting; asterisks = tuned variants as in the paper).
+
+* ``criu_star``  — process-level replay: one file per resource, restored by
+  re-walking metadata and re-issuing per-tensor open/read/close ("syscall
+  replay"); no dedup, no zero elision, no access-order layout, no overlap.
+* ``reap_star``  — VM-style monolithic image with *synchronous* working-set
+  prefetch: one blob capturing everything (no trim: optimizer state and
+  scratch included — the "whole guest" effect), read fully before execution.
+* ``faasnap_star`` — same image, *asynchronous advisory* prefetch: a
+  background reader streams the blob in file order with no completion
+  contract; execution-demanded tensors that aren't resident take a blocking
+  "major fault" served by small reads.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+import pickle
+import threading
+import time
+from pathlib import Path
+from typing import Any, Dict, Optional, Tuple
+
+import numpy as np
+
+from repro.core.treeutil import flatten_state, unflatten_state
+
+
+@dataclasses.dataclass
+class BaselineStats:
+    metadata_s: float = 0.0
+    total_s: float = 0.0
+    bytes_read: int = 0
+    io_ops: int = 0
+    restore_ops: int = 0  # per-resource replay operations
+    major_faults: int = 0
+
+    def as_dict(self):
+        return dataclasses.asdict(self)
+
+
+# --------------------------------------------------------------- CRIU* -----
+def criu_star_snapshot(state, dirpath: str) -> None:
+    d = Path(dirpath)
+    d.mkdir(parents=True, exist_ok=True)
+    leaves, tree = flatten_state(state)
+    index = []
+    for i, (name, arr) in enumerate(leaves):
+        fn = f"res{i:05d}.npy"
+        np.save(d / fn, np.ascontiguousarray(arr))
+        index.append({"name": name, "file": fn})
+    (d / "meta.json").write_text(json.dumps({"tree": tree, "index": index}))
+
+
+def criu_star_restore(dirpath: str, simulate_read_bw=None) -> Tuple[Any, BaselineStats]:
+    stats = BaselineStats()
+    t0 = time.perf_counter()
+    d = Path(dirpath)
+    meta = json.loads((d / "meta.json").read_text())
+    stats.restore_ops += 1
+    stats.metadata_s = time.perf_counter() - t0
+    leaves = {}
+    for ent in meta["index"]:
+        # per-resource replay: open + header parse + read + close per tensor
+        p = d / ent["file"]
+        arr = np.load(p)
+        stats.restore_ops += 3  # open / read / close
+        stats.io_ops += 1
+        stats.bytes_read += arr.nbytes
+        if simulate_read_bw:
+            time.sleep(arr.nbytes / simulate_read_bw)
+        leaves[ent["name"]] = arr
+    state = unflatten_state(meta["tree"], leaves)
+    stats.total_s = time.perf_counter() - t0
+    return state, stats
+
+
+# ------------------------------------------------- monolithic image --------
+def monolith_snapshot(state, path: str, extra_state: Optional[Any] = None) -> None:
+    """Whole-instance capture: params AND everything else (no trim)."""
+    leaves, tree = flatten_state(state)
+    extra_leaves, extra_tree = flatten_state(extra_state) if extra_state is not None else ([], None)
+    header = {"tree": tree, "extra_tree": extra_tree, "tensors": []}
+    blobs = []
+    off = 0
+    # file order = tree order (NOT access order: the format is opaque)
+    for name, arr in list(leaves) + [("__extra__/" + n, a) for n, a in extra_leaves]:
+        raw = np.ascontiguousarray(arr)
+        header["tensors"].append(
+            {"name": name, "dtype": str(raw.dtype), "shape": list(raw.shape),
+             "off": off, "nbytes": raw.nbytes}
+        )
+        blobs.append(raw.view(np.uint8).reshape(-1))
+        off += raw.nbytes
+    hb = pickle.dumps(header)
+    with open(path, "wb") as f:
+        f.write(len(hb).to_bytes(8, "little"))
+        f.write(hb)
+        for b in blobs:
+            f.write(b.tobytes())
+        f.flush()
+        os.fsync(f.fileno())
+
+
+class _MonolithReader:
+    def __init__(self, path: str):
+        self.f = open(path, "rb")
+        hlen = int.from_bytes(self.f.read(8), "little")
+        self.header = pickle.loads(self.f.read(hlen))
+        self.data_off = 8 + hlen
+
+    def read_span(self, off: int, nbytes: int) -> bytes:
+        return os.pread(self.f.fileno(), nbytes, self.data_off + off)
+
+
+def reap_star_restore(path: str, simulate_read_bw=None) -> Tuple[Any, BaselineStats]:
+    """Synchronous prefetch of the ENTIRE image before execution."""
+    stats = BaselineStats()
+    t0 = time.perf_counter()
+    r = _MonolithReader(path)
+    stats.metadata_s = time.perf_counter() - t0
+    total = sum(t["nbytes"] for t in r.header["tensors"])
+    blob = r.read_span(0, total)  # one huge blocking read
+    stats.io_ops += 1
+    stats.bytes_read = len(blob)
+    if simulate_read_bw:
+        time.sleep(len(blob) / simulate_read_bw)
+    leaves = {}
+    for t in r.header["tensors"]:
+        if t["name"].startswith("__extra__/"):
+            continue  # captured, fetched... and unused (the VM-state tax)
+        a = np.frombuffer(blob, np.dtype(t["dtype"]), count=t["nbytes"] // np.dtype(t["dtype"]).itemsize,
+                          offset=t["off"])
+        leaves[t["name"]] = a.reshape(t["shape"])
+    state = unflatten_state(r.header["tree"], leaves)
+    stats.total_s = time.perf_counter() - t0
+    return state, stats
+
+
+class FaasnapAsyncRestorer:
+    """Advisory async prefetch: background reader with NO completion
+    contract; ``ensure(name)`` models the major fault (blocking 64 KiB
+    demand reads) when execution outruns the advisory stream."""
+
+    FAULT_READ = 64 * 1024
+
+    def __init__(self, path: str, lag_s: float = 0.0, simulate_read_bw=None):
+        self.stats = BaselineStats()
+        self._t0 = time.perf_counter()
+        self.r = _MonolithReader(path)
+        self.stats.metadata_s = time.perf_counter() - self._t0
+        self.lag_s = lag_s
+        self.simulate_read_bw = simulate_read_bw
+        self._resident: Dict[str, np.ndarray] = {}
+        self._lock = threading.Lock()
+        self._tensors = [t for t in self.r.header["tensors"]]
+        self._by_name = {t["name"]: t for t in self._tensors}
+        self._thread = threading.Thread(target=self._advisory, daemon=True)
+        self._thread.start()
+
+    def _materialize(self, t, blob: bytes) -> np.ndarray:
+        a = np.frombuffer(blob, np.dtype(t["dtype"]))
+        return a.reshape(t["shape"])
+
+    def _advisory(self):
+        # file order, not access order; the kernel may also deprioritize us
+        for t in self._tensors:
+            if self.lag_s:
+                time.sleep(self.lag_s)
+            with self._lock:
+                if t["name"] in self._resident:
+                    continue
+            blob = self.r.read_span(t["off"], t["nbytes"])
+            self.stats.io_ops += 1
+            self.stats.bytes_read += len(blob)
+            if self.simulate_read_bw:
+                time.sleep(len(blob) / self.simulate_read_bw)
+            with self._lock:
+                self._resident.setdefault(t["name"], self._materialize(t, blob))
+
+    def ensure(self, name: str) -> np.ndarray:
+        with self._lock:
+            arr = self._resident.get(name)
+        if arr is not None:
+            return arr
+        # major fault: blocking small-read loop for exactly this tensor
+        t = self._by_name[name]
+        parts = []
+        for off in range(0, t["nbytes"], self.FAULT_READ):
+            nb = min(self.FAULT_READ, t["nbytes"] - off)
+            parts.append(self.r.read_span(t["off"] + off, nb))
+            self.stats.io_ops += 1
+            self.stats.bytes_read += nb
+            self.stats.major_faults += 1
+            if self.simulate_read_bw:
+                # faults pay per-op latency on top of bandwidth
+                time.sleep(nb / self.simulate_read_bw + 20e-6)
+        arr = self._materialize(t, b"".join(parts))
+        with self._lock:
+            self._resident.setdefault(name, arr)
+        return arr
+
+    def state(self, wait: bool = True) -> Any:
+        leaves = {
+            t["name"]: self.ensure(t["name"])
+            for t in self._tensors
+            if not t["name"].startswith("__extra__/")
+        }
+        self.stats.total_s = time.perf_counter() - self._t0
+        return unflatten_state(self.r.header["tree"], leaves)

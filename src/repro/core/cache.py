@@ -1,0 +1,82 @@
+"""Node-level base-image cache — the host page cache analogue.
+
+Base images hold the bytes shared across function instances (a common base
+model, language runtime weights, ...). They stay resident in node RAM after
+container teardown, so subsequent restores of any function that deduplicated
+against them fetch only private chunks from storage — the paper's
+"specialized node pools / Python+AI pools" operating model builds on this.
+"""
+from __future__ import annotations
+
+import threading
+from collections import OrderedDict
+from typing import Dict, Iterable, Optional, Tuple
+
+import numpy as np
+
+from repro.core import overlay
+from repro.core.treeutil import flatten_state
+
+
+class BaseImage:
+    """Digests + chunk bytes of one shared snapshot, keyed by tensor name."""
+
+    def __init__(self, name: str, page_size: int = overlay.DEFAULT_PAGE):
+        self.name = name
+        self.page_size = page_size
+        self._bytes: Dict[str, np.ndarray] = {}
+        self._digests: Dict[str, np.ndarray] = {}
+
+    @classmethod
+    def from_state(cls, name: str, state, page_size: int = overlay.DEFAULT_PAGE) -> "BaseImage":
+        img = cls(name, page_size)
+        leaves, _ = flatten_state(state)
+        for lname, arr in leaves:
+            raw = np.ascontiguousarray(arr).view(np.uint8).reshape(-1)
+            img._bytes[lname] = raw.copy()
+            img._digests[lname] = overlay.chunk_digests(memoryview(raw), page_size)
+        return img
+
+    def digests(self, name: str) -> Optional[np.ndarray]:
+        return self._digests.get(name)
+
+    def chunk_bytes(self, name: str, start_chunk: int, n: int) -> np.ndarray:
+        raw = self._bytes[name]
+        return raw[start_chunk * self.page_size : (start_chunk + n) * self.page_size]
+
+    @property
+    def nbytes(self) -> int:
+        return sum(b.nbytes for b in self._bytes.values())
+
+
+class NodeImageCache:
+    """LRU cache of BaseImages shared by every restore on this node."""
+
+    def __init__(self, capacity_bytes: int = 8 << 30):
+        self.capacity = capacity_bytes
+        self._images: "OrderedDict[str, BaseImage]" = OrderedDict()
+        self._lock = threading.Lock()
+        self.stats = {"hits": 0, "misses": 0, "evictions": 0, "base_bytes_served": 0}
+
+    def put(self, img: BaseImage) -> None:
+        with self._lock:
+            self._images[img.name] = img
+            self._images.move_to_end(img.name)
+            self._evict()
+
+    def get(self, name: Optional[str]) -> Optional[BaseImage]:
+        if name is None:
+            return None
+        with self._lock:
+            img = self._images.get(name)
+            if img is None:
+                self.stats["misses"] += 1
+                return None
+            self.stats["hits"] += 1
+            self._images.move_to_end(name)
+            return img
+
+    def _evict(self):
+        while sum(i.nbytes for i in self._images.values()) > self.capacity and len(self._images) > 1:
+            self._images.popitem(last=False)
+            self.stats["evictions"] += 1

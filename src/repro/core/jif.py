@@ -1,0 +1,193 @@
+"""JIF — Joint Image Format (the paper's ELF-inspired snapshot container).
+
+One self-contained file holding everything needed to restore a model
+instance::
+
+    magic "JIF1" | u32 header_len | msgpack header | pad(64)
+    | per-tensor interval tables (raw little-endian int64, zero-deserialize)
+    | pad(4096)
+    | data segment: PRIVATE chunks, contiguous, in first-access order
+
+The header carries batched metadata (pytree structure descriptor, dtypes/
+shapes, logical sharding axes, access order, RNG/step/arch config) so the
+whole metadata restore is ONE decode — no per-resource replay.  The data
+segment layout enables restoring the working set with a single sequential
+high-throughput read.
+"""
+from __future__ import annotations
+
+import dataclasses
+import io
+import os
+from typing import Any, Dict, Iterable, List, Optional, Tuple
+
+import msgpack
+import numpy as np
+
+from repro.core.overlay import IntervalTable
+
+MAGIC = b"JIF1"
+ALIGN_TABLE = 64
+ALIGN_DATA = 4096
+VERSION = 1
+
+
+@dataclasses.dataclass
+class TensorEntry:
+    name: str
+    dtype: str
+    shape: Tuple[int, ...]
+    nbytes: int
+    itable_off: int = 0
+    itable_rows: int = 0
+
+    def to_header(self) -> Dict:
+        return {
+            "name": self.name,
+            "dtype": self.dtype,
+            "shape": list(self.shape),
+            "nbytes": self.nbytes,
+            "itable_off": self.itable_off,
+            "itable_rows": self.itable_rows,
+        }
+
+    @classmethod
+    def from_header(cls, d: Dict) -> "TensorEntry":
+        return cls(
+            name=d["name"],
+            dtype=d["dtype"],
+            shape=tuple(d["shape"]),
+            nbytes=d["nbytes"],
+            itable_off=d["itable_off"],
+            itable_rows=d["itable_rows"],
+        )
+
+
+def _pad(f, align: int):
+    off = f.tell()
+    rem = off % align
+    if rem:
+        f.write(b"\0" * (align - rem))
+
+
+def write_jif(
+    path: str,
+    meta: Dict[str, Any],
+    tensors: List[TensorEntry],
+    itables: Dict[str, np.ndarray],
+    data_chunks: Iterable[bytes],
+    page_size: int,
+    base_ref: Optional[Dict] = None,
+) -> Dict[str, int]:
+    """Write atomically (tmp + rename). Returns offsets/stats."""
+    tmp = path + ".tmp"
+    BIG = 2**62  # worst-case-width placeholders: patched header never grows
+    with open(tmp, "wb", buffering=1024 * 1024) as f:
+        f.write(MAGIC + b"\0\0\0\0")
+
+        for t in tensors:  # rows known up front; offsets patched after layout
+            t.itable_rows = np.ascontiguousarray(itables[t.name], np.int64).reshape(-1, 4).shape[0]
+            t.itable_off = BIG
+        draft = _encode_header(meta, tensors, page_size, base_ref, BIG, BIG)
+        f.write(draft)
+        _pad(f, ALIGN_TABLE)
+
+        table_region = f.tell()
+        for t in tensors:
+            it = np.ascontiguousarray(itables[t.name], np.int64).reshape(-1, 4)
+            _pad(f, ALIGN_TABLE)
+            t.itable_off = f.tell()
+            f.write(it.tobytes())
+
+        _pad(f, ALIGN_DATA)
+        data_off = f.tell()
+        data_len = 0
+        for chunk in data_chunks:
+            f.write(chunk)
+            data_len += len(chunk)
+        f.flush()
+        os.fsync(f.fileno())
+
+    # patch the header in place with final offsets (pad to reserved size)
+    final = _encode_header(meta, tensors, page_size, base_ref, data_off, data_len)
+    assert len(final) <= len(draft), "header grew past its reservation"
+    with open(tmp, "r+b") as f:
+        f.seek(0)
+        # u32 holds the TRUE header length; the reservation slack stays as
+        # padding between header and tables (offsets are absolute anyway)
+        f.write(MAGIC + len(final).to_bytes(4, "little"))
+        f.write(final + b"\0" * (len(draft) - len(final)))
+        f.flush()
+        os.fsync(f.fileno())
+    os.replace(tmp, path)
+    return {"data_off": data_off, "data_len": data_len, "table_region": table_region}
+
+
+def _encode_header(meta, tensors, page_size, base_ref, data_off, data_len) -> bytes:
+    return msgpack.packb(
+        {
+            "version": VERSION,
+            "page_size": page_size,
+            "base": base_ref,
+            "meta": meta,
+            "tensors": [t.to_header() for t in tensors],
+            "data_off": data_off,
+            "data_len": data_len,
+        },
+        use_bin_type=True,
+    )
+
+
+class JifReader:
+    """Header + interval tables in two small reads; data via pread ranges."""
+
+    def __init__(self, path: str):
+        self.path = path
+        self._f = open(path, "rb")
+        magic = self._f.read(4)
+        if magic != MAGIC:
+            raise ValueError(f"{path}: not a JIF file")
+        hlen = int.from_bytes(self._f.read(4), "little")
+        self.header = msgpack.unpackb(self._f.read(hlen), raw=False)
+        self.page_size: int = self.header["page_size"]
+        self.meta: Dict = self.header["meta"]
+        self.base_ref = self.header.get("base")
+        self.data_off: int = self.header["data_off"]
+        self.data_len: int = self.header["data_len"]
+        self.tensors = [TensorEntry.from_header(d) for d in self.header["tensors"]]
+        self.by_name = {t.name: t for t in self.tensors}
+        self._itables: Dict[str, IntervalTable] = {}
+
+    # --- metadata restore: batched, zero-deserialize interval tables -------
+    def itable(self, name: str) -> IntervalTable:
+        if name not in self._itables:
+            t = self.by_name[name]
+            self._f.seek(t.itable_off)
+            raw = self._f.read(t.itable_rows * 4 * 8)
+            self._itables[name] = IntervalTable(
+                np.frombuffer(raw, np.int64).reshape(-1, 4)
+            )
+        return self._itables[name]
+
+    def load_all_itables(self) -> None:
+        for t in self.tensors:
+            self.itable(t.name)
+
+    # --- data segment I/O ---------------------------------------------------
+    def pread_chunks(self, chunk_start: int, n: int) -> bytes:
+        """Read n private chunks starting at data-segment chunk offset."""
+        off = self.data_off + chunk_start * self.page_size
+        ln = min(n * self.page_size, self.data_len - chunk_start * self.page_size)
+        return os.pread(self._f.fileno(), ln, off)
+
+    def pread_range(self, byte_off: int, nbytes: int) -> bytes:
+        return os.pread(self._f.fileno(), nbytes, self.data_off + byte_off)
+
+    def close(self):
+        self._f.close()
+
+    def __enter__(self):
+        return self
+
+    def __exit__(self, *a):
+        self.close()

@@ -1,0 +1,75 @@
+"""Zero page pool: pre-allocated, pre-zeroed host buffers.
+
+The paper's zero page pool serves two purposes we reproduce exactly:
+(1) buffer acquisition off the restore critical path (no allocator calls,
+no page faults while the prefetcher is streaming), and (2) ZERO-classified
+chunks are satisfied for free because pool buffers are already zeroed.
+"""
+from __future__ import annotations
+
+import threading
+from collections import defaultdict
+from typing import Dict, List
+
+import numpy as np
+
+
+def _size_class(nbytes: int) -> int:
+    c = 1 << 12
+    while c < nbytes:
+        c <<= 1
+    return c
+
+
+class BufferPool:
+    def __init__(self, capacity_bytes: int = 2 << 30, prezero: bool = True):
+        self.capacity = capacity_bytes
+        self.prezero = prezero
+        self._free: Dict[int, List[np.ndarray]] = defaultdict(list)
+        self._held = 0
+        self._lock = threading.Lock()
+        self.stats = {
+            "hits": 0,
+            "misses": 0,
+            "released": 0,
+            "zero_bytes_avoided": 0,
+            "rezeroed_bytes": 0,
+        }
+
+    def prime(self, sizes_bytes: List[int]) -> None:
+        """Pre-populate the pool (amortized, function-agnostic setup)."""
+        for nb in sizes_bytes:
+            sc = _size_class(nb)
+            with self._lock:
+                if self._held + sc > self.capacity:
+                    return
+                self._free[sc].append(np.zeros(sc, np.uint8))
+                self._held += sc
+
+    def acquire(self, nbytes: int) -> np.ndarray:
+        """Returns a zeroed uint8 buffer of >= nbytes (view of pool block)."""
+        sc = _size_class(nbytes)
+        with self._lock:
+            lst = self._free.get(sc)
+            if lst:
+                buf = lst.pop()
+                self._held -= sc
+                self.stats["hits"] += 1
+                return buf
+        self.stats["misses"] += 1
+        return np.zeros(sc, np.uint8)
+
+    def release(self, buf: np.ndarray, dirty: bool = True) -> None:
+        sc = buf.nbytes
+        with self._lock:
+            if self._held + sc > self.capacity:
+                return  # drop on the floor; GC reclaims
+            if dirty and self.prezero:
+                buf[:] = 0  # re-zero off the critical path (caller's thread)
+                self.stats["rezeroed_bytes"] += sc
+            self._free[sc].append(buf)
+            self._held += sc
+            self.stats["released"] += 1
+
+    def note_zero_chunks(self, nbytes: int) -> None:
+        self.stats["zero_bytes_avoided"] += nbytes

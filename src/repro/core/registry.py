@@ -1,0 +1,54 @@
+"""Function registry: the serverless control-plane view of the model zoo.
+
+Each registered *function* is a model instance with a JIF snapshot on disk,
+an optional base image (shared with sibling functions), and serving
+parameters. The engine resolves invocations through this registry."""
+from __future__ import annotations
+
+import dataclasses
+import json
+import time
+from pathlib import Path
+from typing import Dict, Optional
+
+from repro.configs.base import ModelConfig
+
+
+@dataclasses.dataclass
+class FunctionSpec:
+    name: str
+    arch: str
+    jif_path: str
+    base_image: Optional[str] = None  # node-cache key
+    warm_ttl_s: float = 0.0  # keep-alive window (0: rely on fast restore)
+    max_new_tokens: int = 16
+    registered_at: float = dataclasses.field(default_factory=time.time)
+
+
+class FunctionRegistry:
+    def __init__(self):
+        self._fns: Dict[str, FunctionSpec] = {}
+
+    def register(self, spec: FunctionSpec) -> None:
+        self._fns[spec.name] = spec
+
+    def get(self, name: str) -> FunctionSpec:
+        return self._fns[name]
+
+    def __contains__(self, name: str) -> bool:
+        return name in self._fns
+
+    def names(self):
+        return sorted(self._fns)
+
+    def save(self, path: str) -> None:
+        Path(path).write_text(
+            json.dumps({n: dataclasses.asdict(s) for n, s in self._fns.items()}, indent=2)
+        )
+
+    @classmethod
+    def load(cls, path: str) -> "FunctionRegistry":
+        reg = cls()
+        for n, d in json.loads(Path(path).read_text()).items():
+            reg.register(FunctionSpec(**d))
+        return reg

@@ -1,0 +1,57 @@
+"""State-tree (de)serialization helpers.
+
+A *state* is a nested dict/list/tuple of array leaves. We flatten it to
+``(name, leaf)`` pairs with slash-joined path names and a JSON-able structure
+descriptor, so restore can rebuild the exact pytree in one batched pass — the
+metadata-restore analogue of the paper's "no syscall replay".
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, List, Tuple
+
+import numpy as np
+
+
+def flatten_state(tree) -> Tuple[List[Tuple[str, np.ndarray]], Any]:
+    leaves: List[Tuple[str, np.ndarray]] = []
+
+    def walk(node, path):
+        if isinstance(node, dict):
+            keys = sorted(node.keys())
+            return {"t": "dict", "k": keys, "c": [walk(node[k], path + (str(k),)) for k in keys]}
+        if isinstance(node, (list, tuple)):
+            return {
+                "t": "list" if isinstance(node, list) else "tuple",
+                "c": [walk(v, path + (str(i),)) for i, v in enumerate(node)],
+            }
+        name = "/".join(path) if path else "_root"
+        arr = np.asarray(node)
+        leaves.append((name, arr))
+        return {"t": "leaf", "n": name}
+
+    desc = walk(tree, ())
+    return leaves, desc
+
+
+def unflatten_state(desc, leaves: Dict[str, Any]):
+    if desc["t"] == "dict":
+        return {k: unflatten_state(c, leaves) for k, c in zip(desc["k"], desc["c"])}
+    if desc["t"] == "list":
+        return [unflatten_state(c, leaves) for c in desc["c"]]
+    if desc["t"] == "tuple":
+        return tuple(unflatten_state(c, leaves) for c in desc["c"])
+    return leaves[desc["n"]]
+
+
+def leaf_names(desc) -> List[str]:
+    out: List[str] = []
+
+    def walk(d):
+        if d["t"] == "leaf":
+            out.append(d["n"])
+        else:
+            for c in d["c"]:
+                walk(c)
+
+    walk(desc)
+    return out

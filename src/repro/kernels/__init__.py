@@ -1,0 +1,13 @@
+"""Pallas TPU kernels for the perf-critical layers.
+
+Each kernel package ships: ``kernel.py`` (pl.pallas_call + BlockSpec VMEM
+tiling), ``ops.py`` (jit'd public wrapper), ``ref.py`` (pure-jnp oracle).
+Kernels are validated on CPU with ``interpret=True`` against the oracles;
+they are the TPU deployment path (the dry-run lowers the pure-jnp path so
+roofline terms come from clean XLA HLO).
+
+- overlay_patch:    the paper's Overlay-VMA mechanism on device
+- flash_attention:  causal/windowed tiled attention (prefill/train)
+- decode_attention: flash-decoding over KV blocks w/ GQA + int8 KV
+- ssd_scan:         Mamba2 chunked state-space scan
+"""

@@ -1,0 +1,111 @@
+"""Flash-decoding kernel: one query token vs a long KV cache.
+
+Grid: (batch, kv_heads, kv_blocks) — kv blocks innermost so the running
+(m, l, acc) scratch persists per (b, kvh).  GQA queries for one kv head
+ride together as a (G, hd) tile (G = H/kvH), so the MXU sees a skinny
+matmul per block instead of G vector products.  Valid-length masking uses
+the scalar-prefetched ``pos`` (ring caches: all slots valid once full —
+slot p%W invariant is maintained by the cache writer).  Supports int8 KV
+with per-slot scales (dequantized block-wise in VMEM).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _kernel(pos_ref, q_ref, k_ref, v_ref, ks_ref, vs_ref, o_ref,
+            m_ref, l_ref, acc_ref, *, bk, nk, scale, quantized):
+    j = pl.program_id(2)
+
+    @pl.when(j == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[0, 0].astype(jnp.float32)  # (G, hd)
+    k = k_ref[0, 0].astype(jnp.float32)  # (bk, hd)
+    v = v_ref[0, 0].astype(jnp.float32)
+    if quantized:
+        k = k * ks_ref[0, 0].astype(jnp.float32)[:, None]
+        v = v * vs_ref[0, 0].astype(jnp.float32)[:, None]
+
+    s = jnp.dot(q, k.T, preferred_element_type=jnp.float32) * scale  # (G, bk)
+    kpos = j * bk + jax.lax.broadcasted_iota(jnp.int32, (1, bk), 1)
+    s = jnp.where(kpos <= pos_ref[0], s, NEG_INF)
+
+    m_prev = m_ref[...]
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1, keepdims=True))
+    p = jnp.exp(s - m_new)
+    corr = jnp.exp(m_prev - m_new)
+    l_ref[...] = l_ref[...] * corr + jnp.sum(p, axis=-1, keepdims=True)
+    acc_ref[...] = acc_ref[...] * corr + jnp.dot(
+        p, v, preferred_element_type=jnp.float32
+    )
+    m_ref[...] = m_new
+
+    @pl.when(j == nk - 1)
+    def _finalize():
+        o_ref[0, 0] = (acc_ref[...] / l_ref[...]).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("block_k", "scale", "interpret"))
+def decode_attention_kernel(
+    q: jax.Array,  # (B, H, hd) single token
+    k: jax.Array,  # (B, kvH, Sc, hd) — bf16 or int8
+    v: jax.Array,
+    pos: jax.Array,  # scalar int32: last valid absolute position
+    k_scale=None,  # (B, kvH, Sc) for int8 KV
+    v_scale=None,
+    *,
+    block_k: int = 512,
+    scale=None,
+    interpret: bool = False,
+) -> jax.Array:
+    B, H, hd = q.shape
+    _, kvH, Sc, _ = k.shape
+    G = H // kvH
+    bk = min(block_k, Sc)
+    assert Sc % bk == 0
+    nk = Sc // bk
+    scale = hd**-0.5 if scale is None else scale
+    quantized = k.dtype == jnp.int8
+    if not quantized:
+        k_scale = jnp.zeros((B, kvH, Sc), jnp.float32)
+        v_scale = jnp.zeros((B, kvH, Sc), jnp.float32)
+
+    qg = q.reshape(B, kvH, G, hd)
+    kernel = functools.partial(
+        _kernel, bk=bk, nk=nk, scale=scale, quantized=quantized
+    )
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,  # pos
+        grid=(B, kvH, nk),
+        in_specs=[
+            pl.BlockSpec((1, 1, G, hd), lambda b, h, j, pos: (b, h, 0, 0)),
+            pl.BlockSpec((1, 1, bk, hd), lambda b, h, j, pos: (b, h, j, 0)),
+            pl.BlockSpec((1, 1, bk, hd), lambda b, h, j, pos: (b, h, j, 0)),
+            pl.BlockSpec((1, 1, bk), lambda b, h, j, pos: (b, h, j)),
+            pl.BlockSpec((1, 1, bk), lambda b, h, j, pos: (b, h, j)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, G, hd), lambda b, h, j, pos: (b, h, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((G, 1), jnp.float32),
+            pltpu.VMEM((G, 1), jnp.float32),
+            pltpu.VMEM((G, hd), jnp.float32),
+        ],
+    )
+    out = pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B, kvH, G, hd), q.dtype),
+        interpret=interpret,
+    )(pos.reshape(1).astype(jnp.int32), qg, k, v, k_scale, v_scale)
+    return out.reshape(B, H, hd)

@@ -1,0 +1,25 @@
+"""Public jit'd wrapper for the decode attention kernel."""
+from __future__ import annotations
+
+import jax
+
+from repro.kernels.decode_attention.kernel import decode_attention_kernel
+
+
+def decode_attention(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    pos: jax.Array,
+    k_scale=None,
+    v_scale=None,
+    *,
+    block_k: int = 512,
+    scale=None,
+    interpret: bool = False,
+) -> jax.Array:
+    """(B,H,hd) query vs (B,kvH,Sc,hd) cache -> (B,H,hd)."""
+    return decode_attention_kernel(
+        q, k, v, pos, k_scale, v_scale,
+        block_k=block_k, scale=scale, interpret=interpret,
+    )

@@ -1,0 +1,23 @@
+"""Pure-jnp oracle for flash decoding (matches models/attention.attn_decode
+math: masked softmax over the cache with optional int8 dequant)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def decode_attention_ref(q, k, v, pos, k_scale=None, v_scale=None, scale=None):
+    B, H, hd = q.shape
+    _, kvH, Sc, _ = k.shape
+    G = H // kvH
+    scale = hd**-0.5 if scale is None else scale
+    if k.dtype == jnp.int8:
+        k = k.astype(jnp.float32) * k_scale[..., None]
+        v = v.astype(jnp.float32) * v_scale[..., None]
+    qg = q.reshape(B, kvH, G, hd).astype(jnp.float32)
+    s = jnp.einsum("bkgh,bksh->bkgs", qg, k.astype(jnp.float32)) * scale
+    valid = jnp.arange(Sc) <= pos
+    s = jnp.where(valid[None, None, None], s, -1e30)
+    w = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bkgs,bksh->bkgh", w, v.astype(jnp.float32))
+    return out.reshape(B, H, hd).astype(q.dtype)

@@ -1,0 +1,25 @@
+"""Public jit'd wrapper for the flash attention kernel."""
+from __future__ import annotations
+
+import jax
+
+from repro.kernels.flash_attention.kernel import flash_attention_kernel
+
+
+def flash_attention(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    *,
+    causal: bool = True,
+    window=None,
+    scale=None,
+    block_q: int = 128,
+    block_k: int = 128,
+    interpret: bool = False,
+) -> jax.Array:
+    """(B, H, S, hd) x (B, kvH, S, hd)^2 -> (B, H, S, hd); GQA when kvH < H."""
+    return flash_attention_kernel(
+        q, k, v, causal=causal, window=window, scale=scale,
+        block_q=block_q, block_k=block_k, interpret=interpret,
+    )

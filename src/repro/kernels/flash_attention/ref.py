@@ -1,0 +1,26 @@
+"""Pure-jnp oracle: dense masked softmax attention with GQA + window."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import jax
+
+
+def flash_attention_ref(q, k, v, *, causal=True, window=None, scale=None):
+    B, H, S, hd = q.shape
+    kvH = k.shape[1]
+    G = H // kvH
+    scale = hd**-0.5 if scale is None else scale
+    k = jnp.repeat(k, G, axis=1)
+    v = jnp.repeat(v, G, axis=1)
+    s = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32), k.astype(jnp.float32))
+    s = s * scale
+    qpos = jnp.arange(S)[:, None]
+    kpos = jnp.arange(S)[None, :]
+    mask = jnp.ones((S, S), bool)
+    if causal:
+        mask &= kpos <= qpos
+    if window is not None:
+        mask &= (qpos - kpos) < window
+    s = jnp.where(mask, s, -1e30)
+    w = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bhqk,bhkd->bhqd", w, v.astype(jnp.float32)).astype(q.dtype)

@@ -1,0 +1,3 @@
+from repro.kernels.overlay_patch.ops import overlay_patch
+
+__all__ = ["overlay_patch"]

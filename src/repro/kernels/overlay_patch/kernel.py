@@ -1,0 +1,68 @@
+"""Overlay patch kernel — the Overlay-VMA mechanism as a TPU kernel.
+
+Materializes a restored tensor from (a) a device-resident shared BASE image,
+(b) a sparse stream of PRIVATE pages fetched from the snapshot, and (c)
+implicit ZERO pages, according to a per-page classification table — in one
+pass, on device.
+
+TPU adaptation: the kernel-side analogue of installing PTEs from the
+pre-balanced B-tree.  The page->source table rides in scalar-prefetch SMEM
+so each grid step's BlockSpec ``index_map`` *chooses which private page to
+stream into VMEM* (pages classified BASE/ZERO fetch an arbitrary clamped
+private block but never read it — select masks it out).  One grid step =
+one page; page size is the VMEM tile.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+KIND_ZERO, KIND_BASE, KIND_PRIVATE = 0, 1, 2
+
+
+def _kernel(kinds_ref, src_ref, base_ref, priv_ref, out_ref):
+    i = pl.program_id(0)
+    kind = kinds_ref[i]
+    base_page = base_ref[...]
+    priv_page = priv_ref[...]
+    zero = jnp.zeros_like(base_page)
+    out_ref[...] = jnp.where(
+        kind == KIND_PRIVATE, priv_page, jnp.where(kind == KIND_BASE, base_page, zero)
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def overlay_patch_kernel(
+    base: jax.Array,  # (n_pages, page_elems) device-resident shared image
+    priv: jax.Array,  # (n_priv, page_elems) private pages from the snapshot
+    kinds: jax.Array,  # (n_pages,) int32 {ZERO, BASE, PRIVATE}
+    src: jax.Array,  # (n_pages,) int32 private-page index (PRIVATE only)
+    interpret: bool = False,
+) -> jax.Array:
+    n_pages, page = base.shape
+    n_priv = max(priv.shape[0], 1)
+    priv = priv if priv.shape[0] else jnp.zeros((1, page), priv.dtype)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,  # kinds, src ride in SMEM ahead of the grid
+        grid=(n_pages,),
+        in_specs=[
+            pl.BlockSpec((1, page), lambda i, kinds, src: (i, 0)),
+            # data-dependent streaming: which private page lands in VMEM
+            pl.BlockSpec(
+                (1, page),
+                lambda i, kinds, src: (jnp.clip(src[i], 0, n_priv - 1), 0),
+            ),
+        ],
+        out_specs=pl.BlockSpec((1, page), lambda i, kinds, src: (i, 0)),
+    )
+    return pl.pallas_call(
+        _kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((n_pages, page), base.dtype),
+        interpret=interpret,
+    )(kinds.astype(jnp.int32), src.astype(jnp.int32), base, priv)

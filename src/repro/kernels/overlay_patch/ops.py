@@ -1,0 +1,37 @@
+"""Public wrapper: restore a flat tensor from base/private/zero pages.
+
+Also provides ``plan_from_itable`` to turn a JIF IntervalTable into the
+dense (kinds, src) page tables the kernel consumes (built once at restore,
+host-side — the "pre-balanced B-tree slotted directly in", §4.2)."""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.overlay import KIND_PRIVATE, IntervalTable
+from repro.kernels.overlay_patch.kernel import overlay_patch_kernel
+
+
+def plan_from_itable(table: IntervalTable) -> Tuple[np.ndarray, np.ndarray]:
+    n = table.n_pages
+    kinds = np.zeros((n,), np.int32)
+    src = np.zeros((n,), np.int32)
+    for start, count, kind, s in table.table:
+        kinds[start : start + count] = kind
+        if kind == KIND_PRIVATE:
+            src[start : start + count] = np.arange(s, s + count)
+    return kinds, src
+
+
+def overlay_patch(
+    base: jax.Array,
+    priv: jax.Array,
+    kinds: jax.Array,
+    src: jax.Array,
+    interpret: bool = False,
+) -> jax.Array:
+    """(n_pages, page_elems) patched output on device."""
+    return overlay_patch_kernel(base, priv, kinds, src, interpret=interpret)

@@ -1,0 +1,19 @@
+"""Public jit'd wrapper for the SSD scan kernel."""
+from __future__ import annotations
+
+import jax
+
+from repro.kernels.ssd_scan.kernel import ssd_scan_kernel
+
+
+def ssd_scan(
+    x: jax.Array,  # (B, S, H, P) pre-multiplied by dt
+    a: jax.Array,  # (B, H, S) = dt * A
+    Bm: jax.Array,  # (B, S, G, N)
+    Cm: jax.Array,
+    *,
+    chunk: int = 128,
+    interpret: bool = False,
+):
+    """Returns (y (B,S,H,P), final_state (B,H,P,N))."""
+    return ssd_scan_kernel(x, a, Bm, Cm, chunk=chunk, interpret=interpret)

@@ -1,0 +1,10 @@
+"""Oracle: the models/mamba2.ssd chunked implementation (itself validated
+against step-by-step recurrence in the smoke tests)."""
+from __future__ import annotations
+
+from repro.models.mamba2 import ssd
+
+
+def ssd_scan_ref(x, a, Bm, Cm, chunk=128):
+    # models.mamba2.ssd takes a as (b, s, h); the kernel takes (b, h, s)
+    return ssd(x, a.transpose(0, 2, 1), Bm, Cm, chunk)

@@ -1,0 +1,268 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (architecture x input-shape x
+mesh) cell and extract roofline terms from the compiled artifact.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun                 # all cells
+  PYTHONPATH=src python -m repro.launch.dryrun --arch qwen3-32b --shape train_4k
+  PYTHONPATH=src python -m repro.launch.dryrun --mesh multi --force
+  ... --set remat=dots --set num_microbatches=4 --tag remat_dots
+
+Results cached to results/dryrun/<cell>[.<tag>].json.
+"""
+import argparse
+import dataclasses
+import json
+import time
+import traceback
+from pathlib import Path
+
+import jax
+
+from repro.configs import ARCHS, SHAPES, get_config
+from repro.launch import hw
+from repro.launch.hlo_analysis import collective_bytes
+from repro.launch.mesh import make_production_mesh
+from repro.launch.specs import build_cell, cell_skip_reason, make_rules, modeled_memory
+from repro.sharding.partition import axis_rules
+
+RESULTS = Path(__file__).resolve().parents[3] / "results" / "dryrun"
+
+
+def model_flops(cfg, shape) -> float:
+    """Analytic useful FLOPs: 6·N·D train, 2·N·D serve (N = active params)."""
+    n = cfg.active_param_count()
+    tokens = shape.global_batch * (shape.seq_len if shape.kind != "decode" else 1)
+    return (6.0 if shape.kind == "train" else 2.0) * n * tokens
+
+
+def roofline(cost, coll, n_chips, cfg, shape) -> dict:
+    flops_dev = float(cost.get("flops", 0.0))
+    bytes_dev = float(cost.get("bytes accessed", 0.0))
+    coll_dev = float(coll.get("total", 0.0))
+    terms = {
+        "compute_s": flops_dev / hw.PEAK_FLOPS_BF16,
+        "memory_s": bytes_dev / hw.HBM_BW,
+        "collective_s": coll_dev / hw.ICI_BW,
+    }
+    dominant = max(terms, key=terms.get)
+    mf = model_flops(cfg, shape)
+    hlo_global = flops_dev * n_chips
+    return {
+        **terms,
+        "dominant": dominant,
+        "model_flops": mf,
+        "hlo_flops_global": hlo_global,
+        "useful_flop_ratio": (mf / hlo_global) if hlo_global else 0.0,
+        "roofline_fraction": (mf / hw.PEAK_FLOPS_BF16 / n_chips)
+        / max(sum(terms.values()), 1e-30),
+        "bound_time_s": max(terms.values()),
+        "sum_time_s": sum(terms.values()),
+    }
+
+
+def _compile_plan(arch, shape_name, mesh, multi_pod, overrides, cfg=None):
+    plan = build_cell(arch, shape_name, mesh, multi_pod, overrides, cfg=cfg)
+    jf = jax.jit(
+        plan.fn,
+        in_shardings=plan.in_shardings,
+        out_shardings=plan.out_shardings,
+        donate_argnums=plan.donate_argnums,
+    )
+    t0 = time.time()
+    lowered = jf.lower(*plan.args)
+    t1 = time.time()
+    compiled = lowered.compile()
+    t2 = time.time()
+    return plan, compiled, round(t1 - t0, 2), round(t2 - t1, 2)
+
+
+def _measure(arch, shape_name, mesh, multi_pod, overrides, reps: int) -> dict:
+    """Compile a reps-{1,2} fully-unrolled variant: XLA's cost_analysis counts
+    while-loop bodies ONCE (not x trip-count), so true per-step costs are
+    extrapolated as M1 + (reps-1)*(M2-M1) from two unrolled compiles."""
+    cfg0 = get_config(arch)
+    cfg_r = dataclasses.replace(
+        cfg0,
+        pattern_reps=reps,
+        n_layers=len(cfg0.pattern) * reps + len(cfg0.remainder),
+    )
+    ov = dict(overrides or {})
+    ov.update(unroll_scans=True, unroll_inner=True, num_microbatches=1)
+    _, compiled, _, _ = _compile_plan(arch, shape_name, mesh, multi_pod, ov, cfg=cfg_r)
+    cost = compiled.cost_analysis()
+    coll = collective_bytes(compiled.as_text())
+    return {
+        "flops": float(cost.get("flops", 0.0)),
+        "bytes": float(cost.get("bytes accessed", 0.0)),
+        "coll": {k: float(v) for k, v in coll.items() if k != "counts"},
+    }
+
+
+def _extrapolate(m1: dict, m2: dict, reps: int) -> dict:
+    out = {}
+    for k in ("flops", "bytes"):
+        out[k] = m1[k] + (reps - 1) * max(m2[k] - m1[k], 0.0)
+    coll = {}
+    keys = set(m1["coll"]) | set(m2["coll"])
+    for k in keys:
+        a, b = m1["coll"].get(k, 0.0), m2["coll"].get(k, 0.0)
+        coll[k] = a + (reps - 1) * max(b - a, 0.0)
+    out["coll"] = coll
+    return out
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool, overrides=None, tag="",
+             save_hlo=False) -> dict:
+    cell_id = f"{arch}__{shape_name}__{'multi' if multi_pod else 'single'}"
+    if tag:
+        cell_id += f".{tag}"
+    out = {"cell": cell_id, "arch": arch, "shape": shape_name,
+           "mesh": "2x16x16" if multi_pod else "16x16"}
+
+    skip = cell_skip_reason(arch, shape_name)
+    if skip:
+        out["skipped"] = skip
+        return out
+
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    n_chips = mesh.size
+    rules = make_rules(cfg, shape, multi_pod)
+
+    # decode steps unroll the LAYER scan: scanning over per-layer caches
+    # double-buffers them (xs + ys live simultaneously -> ~3x KV memory);
+    # unrolled, the donated cache updates alias in place.  The inner
+    # flash-decoding block loop stays rolled (bounded live converts).
+    if shape.kind == "decode":
+        overrides = {**(overrides or {}), "unroll_scans": True, "unroll_inner": False}
+
+    with mesh, axis_rules(mesh, rules):
+        # 1) the real step: proves lowering/compile, gives memory fit
+        plan, compiled, lower_s, compile_s = _compile_plan(
+            arch, shape_name, mesh, multi_pod, overrides
+        )
+        mem = compiled.memory_analysis()
+        hlo = compiled.as_text()
+        coll_once = collective_bytes(hlo)
+        if save_hlo:
+            RESULTS.mkdir(parents=True, exist_ok=True)
+            (RESULTS / f"{cell_id}.hlo.txt").write_text(hlo)
+        del compiled, hlo
+
+        # 2) cost measurement via two unrolled variants (see _measure)
+        m1 = _measure(arch, shape_name, mesh, multi_pod, overrides, 1)
+        m2 = _measure(arch, shape_name, mesh, multi_pod, overrides, 2)
+        true = _extrapolate(m1, m2, cfg.pattern_reps)
+
+        per_dev_bytes = (
+            mem.argument_size_in_bytes
+            + mem.output_size_in_bytes
+            + mem.temp_size_in_bytes
+            - mem.alias_size_in_bytes
+        )
+        cost = {"flops": true["flops"], "bytes accessed": true["bytes"]}
+        modeled = modeled_memory(cfg, shape, mesh, plan.meta)
+        out.update(
+            meta=plan.meta,
+            lower_s=lower_s,
+            compile_s=compile_s,
+            n_chips=n_chips,
+            memory={
+                # raw XLA:CPU memory analysis (bf16 emulated in f32 -> temps
+                # are inflated vs the TPU target; see EXPERIMENTS.md)
+                "argument_bytes": mem.argument_size_in_bytes,
+                "output_bytes": mem.output_size_in_bytes,
+                "temp_bytes": mem.temp_size_in_bytes,
+                "alias_bytes": mem.alias_size_in_bytes,
+                "per_device_bytes": per_dev_bytes,
+                "fits_hbm_cpu": bool(per_dev_bytes < hw.HBM_BYTES),
+                # analytic v5e model (authoritative fit judgment)
+                "modeled": modeled,
+                "fits_hbm": modeled["fits_hbm"],
+            },
+            cost={
+                "flops_per_device": true["flops"],
+                "bytes_per_device": true["bytes"],
+                "measure_points": {"m1": m1, "m2": m2} if m1 else "exact-unrolled",
+            },
+            collectives=true["coll"],
+            collectives_hlo_loop_once={
+                k: v for k, v in coll_once.items() if k != "counts"
+            },
+            roofline=roofline(cost, true["coll"], n_chips, cfg, shape),
+        )
+    return out
+
+
+def iter_cells(args):
+    archs = [args.arch] if args.arch else sorted(ARCHS)
+    shapes = [args.shape] if args.shape else list(SHAPES)
+    meshes = {"single": [False], "multi": [True], "both": [False, True]}[args.mesh]
+    for arch in archs:
+        for shape in shapes:
+            for mp in meshes:
+                yield arch, shape, mp
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--mesh", default="both", choices=["single", "multi", "both"])
+    ap.add_argument("--force", action="store_true")
+    ap.add_argument("--tag", default="")
+    ap.add_argument("--save-hlo", action="store_true")
+    ap.add_argument("--set", dest="overrides", action="append", default=[],
+                    help="step overrides, e.g. --set remat=dots")
+    args = ap.parse_args()
+
+    overrides = {}
+    for kv in args.overrides:
+        k, v = kv.split("=", 1)
+        try:
+            v = int(v)
+        except ValueError:
+            pass
+        overrides[k] = v
+
+    RESULTS.mkdir(parents=True, exist_ok=True)
+    failures = 0
+    for arch, shape, mp in iter_cells(args):
+        cell_id = f"{arch}__{shape}__{'multi' if mp else 'single'}"
+        if args.tag:
+            cell_id += f".{args.tag}"
+        path = RESULTS / f"{cell_id}.json"
+        if path.exists() and not args.force:
+            print(f"[skip-cached] {cell_id}")
+            continue
+        print(f"[run] {cell_id} ...", flush=True)
+        t0 = time.time()
+        try:
+            res = run_cell(arch, shape, mp, overrides or None, args.tag, args.save_hlo)
+        except Exception as e:  # record failures: they are bugs in the system
+            failures += 1
+            res = {"cell": cell_id, "error": f"{type(e).__name__}: {e}",
+                   "traceback": traceback.format_exc()}
+            print(f"[FAIL] {cell_id}: {e}")
+        path.write_text(json.dumps(res, indent=2))
+        status = "skipped" if "skipped" in res else ("FAILED" if "error" in res else "ok")
+        if status == "ok":
+            r = res["roofline"]
+            print(
+                f"[done {time.time()-t0:6.1f}s] {cell_id}: {status} "
+                f"dominant={r['dominant']} fit={res['memory']['fits_hbm']} "
+                f"useful={r['useful_flop_ratio']:.2f} roofline={r['roofline_fraction']:.2f}",
+                flush=True,
+            )
+        else:
+            print(f"[done {time.time()-t0:6.1f}s] {cell_id}: {status}", flush=True)
+    if failures:
+        raise SystemExit(f"{failures} cells failed")
+
+
+if __name__ == "__main__":
+    main()

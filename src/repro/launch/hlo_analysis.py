@@ -1,0 +1,99 @@
+"""Parse post-SPMD HLO text for collective traffic.
+
+``compiled.as_text()`` is the per-device module; shapes on collective ops are
+per-device buffer shapes. We convert buffer sizes to *bytes moved per device*
+with standard algorithm factors (ring all-reduce moves ~2x the buffer, etc.)
+using the replica-group size when available.
+"""
+from __future__ import annotations
+
+import re
+from collections import defaultdict
+from typing import Dict, Tuple
+
+DTYPE_BYTES = {
+    "f64": 8, "s64": 8, "u64": 8,
+    "f32": 4, "s32": 4, "u32": 4,
+    "bf16": 2, "f16": 2, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1,
+    "f8e4m3fn": 1, "f8e5m2": 1, "f8e4m3": 1, "f8e5m2fnuz": 1, "f8e4m3fnuz": 1,
+    "c64": 8, "c128": 16,
+}
+
+_COLLECTIVES = (
+    "all-reduce",
+    "all-gather",
+    "reduce-scatter",
+    "all-to-all",
+    "collective-permute",
+)
+
+_OP_RE = re.compile(
+    r"=\s*((?:\([^=]*?\))|(?:[a-z0-9]+\[[0-9,]*\](?:\{[^}]*\})?))\s+"
+    r"(all-reduce-start|all-gather-start|collective-permute-start|"
+    r"all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)\("
+)
+_SHAPE_RE = re.compile(r"([a-z][a-z0-9]*)\[([0-9,]*)\]")
+_GROUPS_LIST_RE = re.compile(r"replica_groups=\{\{([0-9, ]*)\}")
+_GROUPS_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+
+
+def _shape_bytes(type_str: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(type_str):
+        if dt not in DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * DTYPE_BYTES[dt]
+    return total
+
+
+def _group_size(line: str) -> int:
+    m = _GROUPS_LIST_RE.search(line)
+    if m:
+        return len([x for x in m.group(1).split(",") if x.strip() != ""])
+    m = _GROUPS_IOTA_RE.search(line)
+    if m:
+        return int(m.group(2))  # [num_groups, group_size]
+    return 2
+
+
+def collective_bytes(hlo_text: str) -> Dict[str, float]:
+    """Bytes moved per device, by collective kind (+ 'total')."""
+    out: Dict[str, float] = defaultdict(float)
+    counts: Dict[str, int] = defaultdict(int)
+    for line in hlo_text.splitlines():
+        m = _OP_RE.search(line)
+        if m is None:
+            continue
+        type_str, op = m.group(1), m.group(2)
+        op = op.replace("-start", "")
+        size = _shape_bytes(type_str)
+        s = _group_size(line)
+        if op == "all-reduce":
+            moved = 2.0 * size * (s - 1) / s
+        elif op == "all-gather":
+            moved = size * (s - 1) / s  # output is the gathered buffer
+        elif op == "reduce-scatter":
+            moved = size * (s - 1)  # output is the scattered shard
+        elif op == "all-to-all":
+            moved = size * (s - 1) / s
+        else:  # collective-permute
+            moved = float(size)
+        out[op] += moved
+        counts[op] += 1
+    out["total"] = sum(v for k, v in out.items() if k != "total")
+    result = dict(out)
+    result["counts"] = dict(counts)  # type: ignore[assignment]
+    return result
+
+
+def op_histogram(hlo_text: str, top: int = 20) -> Dict[str, int]:
+    """Crude opcode histogram of the optimized module (debug aid)."""
+    hist: Dict[str, int] = defaultdict(int)
+    for m in re.finditer(r"=\s*[a-z0-9\[\],{}()\s]*?([a-z][a-z0-9-]*)\(", hlo_text):
+        hist[m.group(1)] += 1
+    return dict(sorted(hist.items(), key=lambda kv: -kv[1])[:top])

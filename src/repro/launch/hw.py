@@ -1,0 +1,7 @@
+"""TPU v5e hardware constants used by the roofline model (targets, not the
+runtime — this container is CPU-only)."""
+
+PEAK_FLOPS_BF16 = 197e12  # per chip
+HBM_BW = 819e9  # bytes/s per chip
+ICI_BW = 50e9  # bytes/s per link
+HBM_BYTES = 16 * 1024**3  # per chip

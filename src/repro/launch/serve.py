@@ -1,0 +1,55 @@
+"""End-to-end serving driver: publish a function and serve batched requests
+with cold restores (the Spice serving loop).
+
+  PYTHONPATH=src python -m repro.launch.serve --arch qwen1.5-0.5b \
+      --requests 8 --mode spice [--keep-warm]
+"""
+import argparse
+import tempfile
+import time
+
+import jax
+import numpy as np
+
+from repro.configs import get_config
+from repro.models import lm
+from repro.serve.engine import ServerlessNode
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen1.5-0.5b")
+    ap.add_argument("--requests", type=int, default=8)
+    ap.add_argument("--batch", type=int, default=2)
+    ap.add_argument("--prompt-len", type=int, default=16)
+    ap.add_argument("--max-new", type=int, default=8)
+    ap.add_argument("--mode", default="spice",
+                    choices=["spice", "spice_sync", "criu_star", "reap_star",
+                             "faasnap_star"])
+    ap.add_argument("--keep-warm", action="store_true")
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch).reduced()
+    params = lm.init_params(cfg, jax.random.PRNGKey(0))
+    node = ServerlessNode()
+    with tempfile.TemporaryDirectory() as d:
+        node.publish("fn", cfg, params, d,
+                     warm_ttl_s=300.0 if args.keep_warm else 0.0)
+        prompt = np.tile(np.arange(1, args.prompt_len + 1, dtype=np.int32),
+                         (args.batch, 1))
+        # compile-cache warmup
+        node.invoke("fn", prompt, 2, mode="spice_sync", cfg=cfg)
+        node.evict()
+
+        print(f"{'req':>4} {'path':>6} {'ttft_ms':>9} {'total_ms':>9}")
+        for i in range(args.requests):
+            if not args.keep_warm:
+                node.evict()
+            r = node.invoke("fn", prompt, args.max_new, mode=args.mode, cfg=cfg)
+            print(f"{i:>4} {('warm' if not r.cold else args.mode):>6} "
+                  f"{r.ttft_s*1e3:9.2f} {r.total_s*1e3:9.2f}")
+        print("pool:", node.pool.stats)
+
+
+if __name__ == "__main__":
+    main()

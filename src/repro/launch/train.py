@@ -1,0 +1,59 @@
+"""End-to-end training driver.
+
+  PYTHONPATH=src python -m repro.launch.train --arch qwen1.5-0.5b --steps 50 \
+      --ckpt-dir /tmp/ckpt [--reduced] [--resume] [--fail-at 20]
+
+Uses the reduced config on CPU by default; the full configs are exercised
+via the production-mesh dry-run (launch/dryrun.py).
+"""
+import argparse
+import time
+
+from repro.configs import get_config
+from repro.data.synthetic import DataConfig, SyntheticLM
+from repro.ft.health import HealthMonitor
+from repro.ft.manager import CheckpointManager
+from repro.train.loop import LoopConfig, train_loop
+from repro.train.steps import TrainStepConfig
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen1.5-0.5b")
+    ap.add_argument("--steps", type=int, default=50)
+    ap.add_argument("--seq-len", type=int, default=64)
+    ap.add_argument("--global-batch", type=int, default=8)
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--ckpt-every", type=int, default=10)
+    ap.add_argument("--remat", default="dots")
+    ap.add_argument("--microbatches", type=int, default=1)
+    ap.add_argument("--fail-at", type=int, default=None)
+    ap.add_argument("--full-config", action="store_true",
+                    help="use the full architecture (needs real accelerators)")
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch)
+    if not args.full_config:
+        cfg = cfg.reduced()
+    tcfg = TrainStepConfig(remat=args.remat, num_microbatches=args.microbatches)
+    data = SyntheticLM(
+        DataConfig(vocab_size=cfg.vocab_size, seq_len=args.seq_len,
+                   global_batch=args.global_batch)
+    )
+    mgr = CheckpointManager(args.ckpt_dir) if args.ckpt_dir else None
+    mon = HealthMonitor(["host0"])
+
+    def on_step(step, m):
+        mon.heartbeat("host0", m["step_s"])
+        if step % 10 == 0:
+            print(f"step {step:5d}  loss {m['loss']:.4f}  {m['step_s']*1e3:.0f} ms")
+
+    lcfg = LoopConfig(steps=args.steps, ckpt_every=args.ckpt_every,
+                      fail_at_step=args.fail_at)
+    out = train_loop(cfg, tcfg, lcfg, data, mgr, on_step=on_step)
+    print(f"done: {len(out['losses'])} steps, final loss {out['losses'][-1]:.4f}, "
+          f"{out['wall_s']:.1f}s")
+
+
+if __name__ == "__main__":
+    main()

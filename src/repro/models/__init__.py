@@ -1,0 +1,3 @@
+from repro.models import lm
+
+__all__ = ["lm"]

@@ -1,0 +1,293 @@
+"""GQA attention: full (train), chunked prefill, and cached decode.
+
+Pure-jnp reference path (used by the dry-run so roofline terms come from
+clean HLO); the Pallas flash/decode kernels in ``repro.kernels`` are the TPU
+deployment path and are validated against this module's math.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import LayerSpec, ModelConfig
+from repro.models.layers import apply_rope, rmsnorm
+from repro.sharding.partition import ParamSpec, constrain
+
+NEG_INF = -1e30
+
+
+def attn_specs(cfg: ModelConfig) -> Dict[str, ParamSpec]:
+    d, H, kvH, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    s = {
+        "wq": ParamSpec((d, H * hd), ("fsdp", "model"), init="fanin"),
+        "wk": ParamSpec((d, kvH * hd), ("fsdp", "model"), init="fanin"),
+        "wv": ParamSpec((d, kvH * hd), ("fsdp", "model"), init="fanin"),
+        "wo": ParamSpec((H * hd, d), ("model", "fsdp"), init="fanin"),
+    }
+    if cfg.qkv_bias:
+        s["bq"] = ParamSpec((H * hd,), ("model",), init="zeros")
+        s["bk"] = ParamSpec((kvH * hd,), ("model",), init="zeros")
+        s["bv"] = ParamSpec((kvH * hd,), ("model",), init="zeros")
+    if cfg.qk_norm:
+        s["q_norm"] = ParamSpec((hd,), (None,), init="ones", dtype=jnp.float32)
+        s["k_norm"] = ParamSpec((hd,), (None,), init="ones", dtype=jnp.float32)
+    return s
+
+
+def _project_qkv(cfg, p, x, positions, compute_dtype):
+    B, S, _ = x.shape
+    H, kvH, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    q = jnp.einsum("bsd,dk->bsk", x, p["wq"].astype(compute_dtype))
+    k = jnp.einsum("bsd,dk->bsk", x, p["wk"].astype(compute_dtype))
+    v = jnp.einsum("bsd,dk->bsk", x, p["wv"].astype(compute_dtype))
+    if cfg.qkv_bias:
+        q = q + p["bq"].astype(compute_dtype)
+        k = k + p["bk"].astype(compute_dtype)
+        v = v + p["bv"].astype(compute_dtype)
+    q = q.reshape(B, S, H, hd)
+    k = k.reshape(B, S, kvH, hd)
+    v = v.reshape(B, S, kvH, hd)
+    if cfg.qk_norm:
+        q = rmsnorm(q, p["q_norm"], cfg.norm_eps)
+        k = rmsnorm(k, p["k_norm"], cfg.norm_eps)
+    q = apply_rope(q, positions, cfg.rope_theta, cfg.mrope)
+    k = apply_rope(k, positions, cfg.rope_theta, cfg.mrope)
+    q = constrain(q, "batch", None, "heads", None)
+    k = constrain(k, "batch", None, "kv_heads", None)
+    v = constrain(v, "batch", None, "kv_heads", None)
+    return q, k, v
+
+
+def _repeat_kv(k, v, kv_repeat: int):
+    """Replicate KV heads so the head dim divides the TP axis (memory for
+    shardability — the standard GQA trick when kv_heads < model-axis size)."""
+    if kv_repeat > 1:
+        k = jnp.repeat(k, kv_repeat, axis=2)
+        v = jnp.repeat(v, kv_repeat, axis=2)
+    return k, v
+
+
+def quantize_kv(x: jax.Array):
+    """Symmetric per-(batch, head, position) int8 KV quantization."""
+    scale = jnp.maximum(jnp.max(jnp.abs(x.astype(jnp.float32)), axis=-1), 1e-6) / 127.0
+    q = jnp.clip(jnp.round(x.astype(jnp.float32) / scale[..., None]), -127, 127)
+    return q.astype(jnp.int8), scale.astype(jnp.float32)
+
+
+def dequantize_kv(q: jax.Array, scale: jax.Array, dtype):
+    return q.astype(dtype) * scale[..., None].astype(dtype)
+
+
+def _sdpa_block(q, k, v, qpos, kpos, window, scale):
+    """q: (B,Sq,kvH,G,hd)  k/v: (B,Sk,kvH,hd)  -> (B,Sq,kvH,G,hd).
+
+    Masks are built from absolute positions so the same primitive serves
+    full-causal, sliding-window, and chunked-prefill calls.
+    """
+    s = jnp.einsum("bqkgh,bskh->bkgqs", q, k, preferred_element_type=jnp.float32)
+    s = s * scale
+    mask = kpos[None, :] <= qpos[:, None]
+    if window is not None:
+        mask &= (qpos[:, None] - kpos[None, :]) < window
+    s = jnp.where(mask[None, None, None], s, NEG_INF)
+    w = jax.nn.softmax(s, axis=-1).astype(q.dtype)
+    return jnp.einsum("bkgqs,bskh->bqkgh", w, v)
+
+
+def attn_full(
+    cfg: ModelConfig,
+    spec: LayerSpec,
+    p: Dict,
+    x: jax.Array,
+    positions: jax.Array,
+    compute_dtype,
+    return_cache: bool = False,
+    q_chunk: int = 2048,
+    unroll: bool = False,
+    kv_repeat: int = 1,
+    kv_dtype=None,
+    attn_stages: int = 1,
+) -> Tuple[jax.Array, Optional[Dict]]:
+    """Causal (optionally windowed) attention over a full sequence."""
+    B, S, _ = x.shape
+    H, hd = cfg.n_heads, cfg.hd
+    kvH = cfg.n_kv_heads * kv_repeat
+    assert H % kvH == 0, f"kv_repeat {kv_repeat} breaks GQA grouping"
+    G = H // kvH
+    q, k, v = _project_qkv(cfg, p, x, positions, compute_dtype)
+    k, v = _repeat_kv(k, v, kv_repeat)
+    qg = q.reshape(B, S, kvH, G, hd)
+    scale = hd**-0.5
+    kpos = jnp.arange(S)
+
+    if S <= q_chunk:
+        out = _sdpa_block(qg, k, v, jnp.arange(S), kpos, spec.window, scale)
+    else:
+        nq = S // q_chunk
+        qs = qg.reshape(B, nq, q_chunk, kvH, G, hd)
+        # Staged causal K-slicing (§Perf): stage g's query chunks can only
+        # attend to keys < (g+1)·S/stages, a STATIC prefix — so later-masked
+        # key bytes are never touched. stages=1 (default) = full-K chunks;
+        # stages=8 cuts attention score traffic to ~(stages+1)/(2·stages).
+        outs = []
+        for g in range(attn_stages):
+            lo_c, hi_c = g * nq // attn_stages, (g + 1) * nq // attn_stages
+            if lo_c == hi_c:
+                continue
+            k_hi = hi_c * q_chunk
+            # window-aware lower bound: sliding-window layers can never see
+            # keys older than (first query of the stage) - window; rounding
+            # to a chunk boundary keeps the slice static
+            if spec.window is not None:
+                k_lo = max(0, ((lo_c * q_chunk - spec.window) // q_chunk) * q_chunk)
+            else:
+                k_lo = 0
+            kg, vg = k[:, k_lo:k_hi], v[:, k_lo:k_hi]
+            kpos_g = jnp.arange(k_lo, k_hi)
+
+            def chunk_body(_, args, kg=kg, vg=vg, kpos_g=kpos_g):
+                qc, start = args
+                qpos = start + jnp.arange(q_chunk)
+                return None, _sdpa_block(qc, kg, vg, qpos, kpos_g, spec.window, scale)
+
+            starts = jnp.arange(lo_c, hi_c) * q_chunk
+            n_g = hi_c - lo_c
+            _, out_g = jax.lax.scan(
+                chunk_body,
+                None,
+                (qs[:, lo_c:hi_c].swapaxes(0, 1), starts),
+                unroll=n_g if unroll else 1,
+            )
+            outs.append(out_g.swapaxes(0, 1))
+        out = jnp.concatenate(outs, axis=1).reshape(B, S, kvH, G, hd)
+
+    y = out.reshape(B, S, H * hd)
+    y = jnp.einsum("bsk,kd->bsd", y, p["wo"].astype(compute_dtype))
+    y = constrain(y, "batch", None, None)
+
+    cache = None
+    if return_cache:
+        kc = k.swapaxes(1, 2)  # (B, kvH, S, hd)
+        vc = v.swapaxes(1, 2)
+        if spec.window is not None and spec.window < S:
+            W = spec.window
+            # keep slot invariant "abs position p lives at slot p % W"
+            j = jnp.arange(W)
+            a = j + W * ((S - 1 - j) // W)  # latest position congruent to j
+            kc = jnp.take(kc, a, axis=2)
+            vc = jnp.take(vc, a, axis=2)
+        if kv_dtype is not None and jnp.dtype(kv_dtype) == jnp.int8:
+            kq, ks = quantize_kv(kc)
+            vq, vs = quantize_kv(vc)
+            cache = {"k": kq, "v": vq, "k_scale": ks, "v_scale": vs}
+        else:
+            if kv_dtype is not None:
+                kc, vc = kc.astype(kv_dtype), vc.astype(kv_dtype)
+            cache = {"k": kc, "v": vc}
+        cache = {
+            key: constrain(val, "batch", "kv_heads", "kv_seq", None)
+            if val.ndim == 4
+            else constrain(val, "batch", "kv_heads", "kv_seq")
+            for key, val in cache.items()
+        }
+    return y, cache
+
+
+def attn_decode(
+    cfg: ModelConfig,
+    spec: LayerSpec,
+    p: Dict,
+    x: jax.Array,  # (B, 1, d)
+    cache: Dict,
+    pos: jax.Array,  # scalar int32: number of tokens already consumed
+    compute_dtype,
+    kv_repeat: int = 1,
+    kv_block: int = 2048,
+    unroll_inner: bool = False,
+) -> Tuple[jax.Array, Dict]:
+    B = x.shape[0]
+    H, hd = cfg.n_heads, cfg.hd
+    kvH = cfg.n_kv_heads * kv_repeat
+    G = H // kvH
+    positions = jnp.broadcast_to(pos, (B, 1))
+    q, k, v = _project_qkv(cfg, p, x, positions, compute_dtype)
+    k, v = _repeat_kv(k, v, kv_repeat)
+
+    quantized = cache["k"].dtype == jnp.int8
+    Sc = cache["k"].shape[2]
+    slot = pos % Sc if spec.window is not None else pos
+    new_cache = {}
+    if quantized:
+        kq, ks = quantize_kv(k.swapaxes(1, 2))
+        vq, vs = quantize_kv(v.swapaxes(1, 2))
+        new_cache["k"] = jax.lax.dynamic_update_slice(cache["k"], kq, (0, 0, slot, 0))
+        new_cache["v"] = jax.lax.dynamic_update_slice(cache["v"], vq, (0, 0, slot, 0))
+        new_cache["k_scale"] = jax.lax.dynamic_update_slice(cache["k_scale"], ks, (0, 0, slot))
+        new_cache["v_scale"] = jax.lax.dynamic_update_slice(cache["v_scale"], vs, (0, 0, slot))
+    else:
+        kc = jax.lax.dynamic_update_slice(
+            cache["k"], k.swapaxes(1, 2).astype(cache["k"].dtype), (0, 0, slot, 0)
+        )
+        vc = jax.lax.dynamic_update_slice(
+            cache["v"], v.swapaxes(1, 2).astype(cache["v"].dtype), (0, 0, slot, 0)
+        )
+        new_cache = {
+            "k": constrain(kc, "batch", "kv_heads", "kv_seq", None),
+            "v": constrain(vc, "batch", "kv_heads", "kv_seq", None),
+        }
+
+    # Flash-decoding: stream the cache in KV blocks with an online softmax.
+    # Blocks are read with dynamic_slice from the cache's native layout (a
+    # scan-xs formulation would materialize a transposed full-cache copy),
+    # bounding live converts/dequants to one block — on TPU this is also the
+    # natural VMEM-tile structure (see kernels/decode_attention).
+    qg = q.reshape(B, kvH, G, hd)
+    blk = min(kv_block, Sc)
+    if Sc % blk:
+        blk = Sc
+    nb = Sc // blk
+    scale = hd**-0.5
+
+    def body(carry, i):
+        m_prev, s_prev, acc = carry
+        start = i * blk
+        kb = jax.lax.dynamic_slice(
+            new_cache["k"], (0, 0, start, 0), (B, kvH, blk, hd)
+        )
+        vb = jax.lax.dynamic_slice(
+            new_cache["v"], (0, 0, start, 0), (B, kvH, blk, hd)
+        )
+        if quantized:
+            ksb = jax.lax.dynamic_slice(new_cache["k_scale"], (0, 0, start), (B, kvH, blk))
+            vsb = jax.lax.dynamic_slice(new_cache["v_scale"], (0, 0, start), (B, kvH, blk))
+            kb = dequantize_kv(kb, ksb, compute_dtype)
+            vb = dequantize_kv(vb, vsb, compute_dtype)
+        else:
+            kb = kb.astype(compute_dtype)
+            vb = vb.astype(compute_dtype)
+        s = jnp.einsum("bkgh,bksh->bkgs", qg, kb, preferred_element_type=jnp.float32)
+        s = s * scale
+        valid = (start + jnp.arange(blk)) <= pos  # ring: all valid once full
+        s = jnp.where(valid[None, None, None], s, NEG_INF)
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1))
+        corr = jnp.exp(m_prev - m_new)
+        pblk = jnp.exp(s - m_new[..., None])
+        s_new = s_prev * corr + jnp.sum(pblk, axis=-1)
+        upd = jnp.einsum("bkgs,bksh->bkgh", pblk.astype(compute_dtype), vb)
+        acc = acc * corr[..., None] + upd.astype(jnp.float32)
+        return (m_new, s_new, acc), None
+
+    init = (
+        jnp.full((B, kvH, G), NEG_INF, jnp.float32),
+        jnp.zeros((B, kvH, G), jnp.float32),
+        jnp.zeros((B, kvH, G, hd), jnp.float32),
+    )
+    (m, s_sum, acc), _ = jax.lax.scan(
+        body, init, jnp.arange(nb), unroll=nb if unroll_inner else 1
+    )
+    out = (acc / s_sum[..., None]).astype(compute_dtype)
+    y = out.reshape(B, 1, H * hd)
+    y = jnp.einsum("bsk,kd->bsd", y, p["wo"].astype(compute_dtype))
+    return constrain(y, "batch", None, None), new_cache

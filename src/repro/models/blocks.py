@@ -1,0 +1,137 @@
+"""Pattern-block layer application: dense/MoE FFN x attn/mamba mixers."""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax.numpy as jnp
+
+from repro.configs.base import LayerSpec, ModelConfig
+from repro.models import attention, mamba2, moe
+from repro.models.layers import mlp, mlp_specs, rmsnorm
+from repro.sharding.partition import ParamSpec
+
+
+def layer_specs(cfg: ModelConfig, spec: LayerSpec) -> Dict:
+    s: Dict = {"ln1": ParamSpec((cfg.d_model,), (None,), init="ones", dtype=jnp.float32)}
+    if spec.kind == "attn":
+        s["attn"] = attention.attn_specs(cfg)
+    else:
+        s["mamba"] = mamba2.mamba_specs(cfg)
+    if spec.ffn:
+        s["ln2"] = ParamSpec((cfg.d_model,), (None,), init="ones", dtype=jnp.float32)
+        s["moe" if spec.moe else "mlp"] = (
+            moe.moe_specs(cfg) if spec.moe else mlp_specs(cfg)
+        )
+    return s
+
+
+def cache_specs_for_layer(
+    cfg: ModelConfig,
+    spec: LayerSpec,
+    batch: int,
+    cache_len: int,
+    kv_dtype,
+    compute_dtype,
+    kv_repeat: int = 1,
+) -> Dict:
+    if spec.kind == "attn":
+        Sc = min(spec.window, cache_len) if spec.window else cache_len
+        kvH = cfg.n_kv_heads * kv_repeat
+        shp = (batch, kvH, Sc, cfg.hd)
+        ax = ("batch", "kv_heads", "kv_seq", None)
+        import jax.numpy as _jnp
+
+        out = {
+            "k": ParamSpec(shp, ax, init="zeros", dtype=kv_dtype),
+            "v": ParamSpec(shp, ax, init="zeros", dtype=kv_dtype),
+        }
+        if _jnp.dtype(kv_dtype) == _jnp.int8:
+            sc = ParamSpec((batch, kvH, Sc), ax[:3], init="zeros", dtype=_jnp.float32)
+            out["k_scale"] = sc
+            out["v_scale"] = sc
+        return out
+    conv_dim = cfg.d_inner + 2 * cfg.ssm_groups * cfg.ssm_state
+    out = {
+        "ssm": ParamSpec(
+            (batch, cfg.ssm_heads, cfg.ssm_head_dim, cfg.ssm_state),
+            ("batch", "heads", None, None),
+            init="zeros",
+            dtype=jnp.float32,
+        )
+    }
+    gn = cfg.ssm_groups * cfg.ssm_state
+    if cfg.mamba_split_proj:
+        for key, c in [("conv_x", cfg.d_inner), ("conv_B", gn), ("conv_C", gn)]:
+            out[key] = ParamSpec(
+                (batch, cfg.conv_kernel - 1, c), ("batch", None, "model"),
+                init="zeros", dtype=compute_dtype,
+            )
+    else:
+        out["conv"] = ParamSpec(
+            (batch, cfg.conv_kernel - 1, conv_dim),
+            ("batch", None, "model"),
+            init="zeros",
+            dtype=compute_dtype,
+        )
+    return out
+
+
+def apply_layer(
+    cfg: ModelConfig,
+    spec: LayerSpec,
+    p: Dict,
+    x,
+    *,
+    positions,
+    mode: str,  # "train" | "prefill" | "decode"
+    cache: Optional[Dict],
+    pos,
+    compute_dtype,
+    q_chunk: int = 2048,
+    unroll: bool = False,  # inner (attention-block) loops
+    kv_repeat: int = 1,
+    kv_dtype=None,
+    kv_block: int = 2048,
+    attn_stages: int = 1,
+) -> Tuple:
+    h = rmsnorm(x, p["ln1"], cfg.norm_eps)
+    new_cache = None
+    if spec.kind == "attn":
+        if mode == "decode":
+            y, new_cache = attention.attn_decode(
+                cfg, spec, p["attn"], h, cache, pos, compute_dtype,
+                kv_repeat=kv_repeat, kv_block=kv_block, unroll_inner=unroll,
+            )
+        else:
+            y, new_cache = attention.attn_full(
+                cfg,
+                spec,
+                p["attn"],
+                h,
+                positions,
+                compute_dtype,
+                return_cache=(mode == "prefill"),
+                q_chunk=q_chunk,
+                unroll=unroll,
+                kv_repeat=kv_repeat,
+                kv_dtype=kv_dtype,
+                attn_stages=attn_stages,
+            )
+    else:
+        if mode == "decode":
+            y, new_cache = mamba2.mamba_decode(cfg, p["mamba"], h, cache, compute_dtype)
+        else:
+            y, new_cache = mamba2.mamba_full(
+                cfg, p["mamba"], h, compute_dtype, return_cache=(mode == "prefill")
+            )
+    x = x + y
+
+    aux = jnp.zeros((), jnp.float32)
+    if spec.ffn:
+        h = rmsnorm(x, p["ln2"], cfg.norm_eps)
+        if spec.moe:
+            y, aux = moe.moe_ffn(cfg, p["moe"], h, compute_dtype)
+        else:
+            y = mlp(cfg, p["mlp"], h, compute_dtype)
+        x = x + y
+    return x, new_cache, aux

@@ -1,0 +1,42 @@
+"""Modality frontends — STUBS per the assignment: ``input_specs()`` provides
+precomputed patch/frame embeddings; only the transformer backbone is real."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def overlay_patches(x: jax.Array, patch_embeds: jax.Array) -> jax.Array:
+    """Overlay vision patch embeddings on the sequence front (VLM stub)."""
+    P = patch_embeds.shape[1]
+    return jnp.concatenate([x[:, :P] + patch_embeds, x[:, P:]], axis=1)
+
+
+def make_patch_embeds(key, batch: int, n_patches: int, d_model: int, dtype=jnp.bfloat16):
+    return (jax.random.normal(key, (batch, n_patches, d_model)) * 0.02).astype(dtype)
+
+
+def make_frame_embeds(key, batch: int, seq: int, d_model: int, dtype=jnp.bfloat16):
+    """EnCodec frame embeddings stub (audio decoder input)."""
+    return (jax.random.normal(key, (batch, seq, d_model)) * 0.02).astype(dtype)
+
+
+def mrope_positions(batch: int, seq: int, n_patches: int, grid: int = 16) -> np.ndarray:
+    """(3, B, S) t/h/w position ids: image tokens get a 2-D grid at t=0;
+    text tokens get equal t=h=w positions (qwen2-vl convention, stubbed)."""
+    t = np.arange(seq, dtype=np.int32)
+    h = t.copy()
+    w = t.copy()
+    n = min(n_patches, seq)
+    ij = np.arange(n, dtype=np.int32)
+    t[:n] = 0
+    h[:n] = ij // grid
+    w[:n] = ij % grid
+    # text positions continue after the image box
+    off = int(max(grid, grid)) - n
+    t[n:] = np.arange(seq - n, dtype=np.int32) + grid
+    h[n:] = t[n:]
+    w[n:] = t[n:]
+    pos = np.stack([t, h, w])  # (3, S)
+    return np.broadcast_to(pos[:, None, :], (3, batch, seq)).copy()

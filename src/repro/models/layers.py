@@ -1,0 +1,152 @@
+"""Shared primitive layers: norms, rotary embeddings, gated MLP, and the
+sharded embedding lookup."""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+from repro.sharding.partition import (
+    ParamSpec,
+    constrain,
+    current_rules,
+    logical_to_spec,
+)
+
+
+def rmsnorm(x: jax.Array, w: jax.Array, eps: float = 1e-6) -> jax.Array:
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    x = x * jax.lax.rsqrt(jnp.mean(x * x, axis=-1, keepdims=True) + eps)
+    return (x * w.astype(jnp.float32)).astype(dt)
+
+
+def rope_freqs(hd_half: int, theta: float) -> jax.Array:
+    return 1.0 / (theta ** (jnp.arange(hd_half, dtype=jnp.float32) / hd_half))
+
+
+def apply_rope(
+    x: jax.Array,  # (B, S, H, hd)
+    positions: jax.Array,  # (B, S) int32 or (3, B, S) for M-RoPE
+    theta: float,
+    mrope: bool = False,
+) -> jax.Array:
+    """Half-rotation RoPE; M-RoPE splits the rotary half-dim into (t,h,w)
+    sections of proportion (1/2, 1/4, 1/4) rotated by per-axis positions."""
+    hd = x.shape[-1]
+    half = hd // 2
+    inv = rope_freqs(half, theta)  # (half,)
+    if mrope:
+        if positions.ndim == 2:  # text-only: reuse positions for all sections
+            positions = jnp.broadcast_to(positions[None], (3,) + positions.shape)
+        s_t = half // 2
+        s_h = (half - s_t) // 2
+        s_w = half - s_t - s_h
+        sect = jnp.concatenate(
+            [
+                jnp.zeros((s_t,), jnp.int32),
+                jnp.ones((s_h,), jnp.int32),
+                jnp.full((s_w,), 2, jnp.int32),
+            ]
+        )  # (half,) -> which position stream drives each freq
+        # angles: (B, S, half)
+        pos_sel = jnp.take(positions, sect, axis=0)  # (half bound into axis0)? ->
+        # positions: (3,B,S); select per-freq stream -> (half, B, S)
+        ang = pos_sel.astype(jnp.float32) * inv[:, None, None]
+        ang = jnp.moveaxis(ang, 0, -1)  # (B, S, half)
+    else:
+        ang = positions.astype(jnp.float32)[..., None] * inv  # (B, S, half)
+    cos = jnp.cos(ang)[..., None, :].astype(x.dtype)  # (B,S,1,half)
+    sin = jnp.sin(ang)[..., None, :].astype(x.dtype)
+    x1, x2 = x[..., :half], x[..., half:]
+    return jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+
+
+# ---------------------------------------------------------------- gated MLP
+def mlp_specs(cfg: ModelConfig) -> dict:
+    d, f = cfg.d_model, cfg.d_ff
+    return {
+        "w_gate": ParamSpec((d, f), ("fsdp", "model"), init="fanin"),
+        "w_up": ParamSpec((d, f), ("fsdp", "model"), init="fanin"),
+        "w_down": ParamSpec((f, d), ("model", "fsdp"), init="fanin"),
+    }
+
+
+def mlp(cfg: ModelConfig, p: dict, x: jax.Array, compute_dtype) -> jax.Array:
+    h = jnp.einsum("bsd,df->bsf", x, p["w_gate"].astype(compute_dtype))
+    u = jnp.einsum("bsd,df->bsf", x, p["w_up"].astype(compute_dtype))
+    h = jax.nn.silu(h.astype(jnp.float32)).astype(compute_dtype) * u
+    h = constrain(h, "batch", None, "model")
+    return jnp.einsum("bsf,fd->bsd", h, p["w_down"].astype(compute_dtype))
+
+
+def embed_specs(cfg: ModelConfig) -> dict:
+    s = {"tok": ParamSpec((cfg.vocab_size, cfg.d_model), ("vocab", "fsdp"))}
+    if not cfg.tie_embeddings:
+        s["unembed"] = ParamSpec((cfg.d_model, cfg.vocab_size), ("fsdp", "vocab"), init="fanin")
+    return s
+
+
+def _shardmap_lookup(rules, w, tokens, compute_dtype):
+    """Masked lookup + psum over the vocab-sharding axis, via shard_map.
+
+    A plain gather from a vocab-sharded table makes GSPMD replicate the full
+    table ("involuntary full rematerialization", multi-GB transients); the
+    explicit form moves only (B, S, d) activation bytes.
+    """
+    from repro.models.moe import shard_map  # shared wrapper
+
+    mesh = rules.mesh
+    wspec = logical_to_spec(("vocab", "fsdp"), w.shape, rules)
+    tspec = logical_to_spec(("batch", None), tokens.shape, rules)
+    v_axes = (wspec[0],) if isinstance(wspec[0], str) else tuple(wspec[0])
+
+    def local(wl, tl):
+        if wspec[1] is not None:
+            fs = (wspec[1],) if isinstance(wspec[1], str) else tuple(wspec[1])
+            for ax in fs:
+                wl = jax.lax.all_gather(wl, ax, axis=1, tiled=True)
+        wl = wl.astype(compute_dtype)
+        Vl = wl.shape[0]
+        rank = jax.lax.axis_index(v_axes[0])
+        for ax in v_axes[1:]:
+            rank = rank * mesh.shape[ax] + jax.lax.axis_index(ax)
+        rel = tl - rank * Vl
+        ok = (rel >= 0) & (rel < Vl)
+        out = jnp.where(
+            ok[..., None], jnp.take(wl, jnp.clip(rel, 0, Vl - 1), axis=0), 0
+        )
+        return jax.lax.psum(out, v_axes)
+
+    out_spec = P(*(tuple(tspec) + (None,)))
+    return shard_map(local, mesh, in_specs=(wspec, tspec), out_specs=out_spec)(
+        w, tokens
+    )
+
+
+def embed(cfg: ModelConfig, p: dict, tokens: jax.Array, compute_dtype) -> jax.Array:
+    w = p["tok"]
+    rules = current_rules()
+    vocab_sharded = (
+        rules is not None
+        and logical_to_spec(("vocab", "fsdp"), w.shape, rules)[0] is not None
+    )
+    if vocab_sharded:
+        out = _shardmap_lookup(rules, w, tokens, compute_dtype)
+    else:
+        out = jnp.take(w.astype(compute_dtype), tokens, axis=0)
+    if cfg.name.startswith("gemma"):
+        out = out * jnp.asarray(cfg.d_model**0.5, compute_dtype)
+    return constrain(out, "batch", None, None)
+
+
+def unembed(cfg: ModelConfig, p: dict, x: jax.Array, compute_dtype) -> jax.Array:
+    if cfg.tie_embeddings:
+        w = p["tok"].astype(compute_dtype)  # (V, d)
+        logits = jnp.einsum("bsd,vd->bsv", x, w)
+    else:
+        logits = jnp.einsum("bsd,dv->bsv", x, p["unembed"].astype(compute_dtype))
+    return constrain(logits, "batch", None, "vocab")

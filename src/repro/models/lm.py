@@ -1,0 +1,286 @@
+"""Unified causal LM over pattern blocks: init / train forward / prefill /
+decode for all 10 assigned architectures.
+
+Layer stacks are ``jax.lax.scan``s over the repeating pattern (params stacked
+along a leading ``reps`` axis), which keeps lowered-HLO size O(pattern) and
+makes 256/512-device SPMD dry-run compiles tractable.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import blocks
+from repro.models.frontends import overlay_patches
+from repro.models.layers import embed, embed_specs, rmsnorm, unembed
+from repro.sharding.partition import (
+    ParamSpec,
+    abstract_from_specs,
+    init_from_specs,
+    map_specs,
+    shardings_from_specs,
+)
+
+DEFAULT_COMPUTE = jnp.bfloat16
+
+REMAT_POLICIES = {
+    "full": None,  # save nothing, recompute everything
+    "dots": "dots_saveable",
+    "dots_no_batch": "dots_with_no_batch_dims_saveable",
+}
+
+
+def _stack(spec_tree, reps: int):
+    def add_dim(s: ParamSpec) -> ParamSpec:
+        return dataclasses.replace(s, shape=(reps,) + s.shape, logical=(None,) + s.logical)
+
+    return map_specs(spec_tree, add_dim)
+
+
+def param_specs(cfg: ModelConfig) -> Dict:
+    pattern = tuple(
+        _stack(blocks.layer_specs(cfg, s), cfg.pattern_reps) for s in cfg.pattern
+    )
+    remainder = tuple(blocks.layer_specs(cfg, s) for s in cfg.remainder)
+    return {
+        "embed": embed_specs(cfg),
+        "pattern": pattern,
+        "remainder": remainder,
+        "final_norm": ParamSpec((cfg.d_model,), (None,), init="ones", dtype=jnp.float32),
+    }
+
+
+def init_params(cfg: ModelConfig, key, dtype=jnp.float32):
+    return init_from_specs(param_specs(cfg), key, dtype)
+
+
+def abstract_params(cfg: ModelConfig, dtype=jnp.float32):
+    return abstract_from_specs(param_specs(cfg), dtype)
+
+
+def param_shardings(cfg: ModelConfig):
+    return shardings_from_specs(param_specs(cfg))
+
+
+def cache_specs(
+    cfg: ModelConfig,
+    batch: int,
+    cache_len: int,
+    kv_dtype=jnp.bfloat16,
+    compute_dtype=DEFAULT_COMPUTE,
+    kv_repeat: int = 1,
+) -> Dict:
+    pattern = tuple(
+        _stack(
+            blocks.cache_specs_for_layer(
+                cfg, s, batch, cache_len, kv_dtype, compute_dtype, kv_repeat
+            ),
+            cfg.pattern_reps,
+        )
+        for s in cfg.pattern
+    )
+    remainder = tuple(
+        blocks.cache_specs_for_layer(
+            cfg, s, batch, cache_len, kv_dtype, compute_dtype, kv_repeat
+        )
+        for s in cfg.remainder
+    )
+    return {"pattern": pattern, "remainder": remainder}
+
+
+def init_cache(cfg, batch, cache_len, kv_dtype=jnp.bfloat16,
+               compute_dtype=DEFAULT_COMPUTE, kv_repeat: int = 1):
+    specs = cache_specs(cfg, batch, cache_len, kv_dtype, compute_dtype, kv_repeat)
+    return map_specs(specs, lambda s: jnp.zeros(s.shape, s.dtype))
+
+
+def abstract_cache(cfg, batch, cache_len, kv_dtype=jnp.bfloat16,
+                   compute_dtype=DEFAULT_COMPUTE, kv_repeat: int = 1):
+    return abstract_from_specs(
+        cache_specs(cfg, batch, cache_len, kv_dtype, compute_dtype, kv_repeat), None
+    )
+
+
+def cache_shardings(cfg, batch, cache_len, kv_dtype=jnp.bfloat16,
+                    compute_dtype=DEFAULT_COMPUTE, kv_repeat: int = 1):
+    return shardings_from_specs(
+        cache_specs(cfg, batch, cache_len, kv_dtype, compute_dtype, kv_repeat)
+    )
+
+
+# ------------------------------------------------------------------ forward
+def _embed_inputs(cfg: ModelConfig, params, batch: Dict, compute_dtype):
+    if cfg.frontend == "audio":
+        x = batch["frame_embeds"].astype(compute_dtype)
+    else:
+        x = embed(cfg, params["embed"], batch["tokens"], compute_dtype)
+        if cfg.frontend == "vision" and "patch_embeds" in batch:
+            x = overlay_patches(x, batch["patch_embeds"].astype(compute_dtype))
+    positions = batch.get("positions")
+    if positions is None:
+        B, S = x.shape[:2]
+        positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
+    return x, positions
+
+
+def _run_stack(
+    cfg: ModelConfig,
+    params,
+    x,
+    positions,
+    *,
+    mode: str,
+    caches: Optional[Dict],
+    pos,
+    compute_dtype,
+    remat: Optional[str],
+    q_chunk: int,
+    unroll: bool = False,
+    unroll_inner: Optional[bool] = None,
+    kv_repeat: int = 1,
+    kv_dtype=None,
+    kv_block: int = 2048,
+    attn_stages: int = 1,
+):
+    inner = unroll if unroll_inner is None else unroll_inner
+    apply = partial(
+        blocks.apply_layer,
+        cfg,
+        positions=positions,
+        mode=mode,
+        pos=pos,
+        compute_dtype=compute_dtype,
+        q_chunk=q_chunk,
+        unroll=inner,
+        kv_repeat=kv_repeat,
+        kv_dtype=kv_dtype,
+        kv_block=kv_block,
+        attn_stages=attn_stages,
+    )
+    scan_unroll = cfg.pattern_reps if unroll else 1
+
+    if mode == "train":
+
+        def body(x, p_rep):
+            aux = jnp.zeros((), jnp.float32)
+            for i, spec in enumerate(cfg.pattern):
+                x, _, a = apply(spec, p_rep[i], x, cache=None)
+                aux = aux + a
+            return x, aux
+
+        policy_name = REMAT_POLICIES.get(remat or "full")
+        policy = getattr(jax.checkpoint_policies, policy_name) if policy_name else None
+        body = jax.checkpoint(body, policy=policy)
+        x, auxs = jax.lax.scan(body, x, params["pattern"], unroll=scan_unroll)
+        aux = jnp.sum(auxs)
+        new_caches = None
+        for j, spec in enumerate(cfg.remainder):
+            # remainder layers are rematted too (saving their attention
+            # intermediates costs multiple GB/layer at 4k sequal batch)
+            def rem_body(x, p_j, _spec=spec):
+                x, _, a = apply(_spec, p_j, x, cache=None)
+                return x, a
+
+            x, a = jax.checkpoint(rem_body, policy=policy)(x, params["remainder"][j])
+            aux = aux + a
+    else:
+
+        def body(x, xs):
+            p_rep, cache_rep = xs
+            new_c = []
+            for i, spec in enumerate(cfg.pattern):
+                c_in = None if cache_rep is None else cache_rep[i]
+                x, c, _ = apply(spec, p_rep[i], x, cache=c_in)
+                new_c.append(c)
+            return x, tuple(new_c)
+
+        if mode == "prefill":
+            # no input caches: scan only over params, emit fresh caches
+            def body_prefill(x, p_rep):
+                return body(x, (p_rep, None))
+
+            x, pat_caches = jax.lax.scan(
+                body_prefill, x, params["pattern"], unroll=scan_unroll
+            )
+        else:
+            x, pat_caches = jax.lax.scan(
+                body, x, (params["pattern"], caches["pattern"]), unroll=scan_unroll
+            )
+        rem_caches = []
+        for j, spec in enumerate(cfg.remainder):
+            c_in = None if mode == "prefill" else caches["remainder"][j]
+            x, c, _ = apply(spec, params["remainder"][j], x, cache=c_in)
+            rem_caches.append(c)
+        new_caches = {"pattern": pat_caches, "remainder": tuple(rem_caches)}
+        aux = jnp.zeros((), jnp.float32)
+    return x, new_caches, aux
+
+
+def forward(
+    cfg: ModelConfig,
+    params,
+    batch: Dict,
+    *,
+    mode: str = "train",
+    caches: Optional[Dict] = None,
+    pos=None,
+    compute_dtype=DEFAULT_COMPUTE,
+    remat: Optional[str] = None,
+    q_chunk: int = 2048,
+    logits_mode: str = "all",  # "all" | "last"
+    unroll: bool = False,
+    unroll_inner: Optional[bool] = None,
+    kv_repeat: int = 1,
+    kv_dtype=None,
+    kv_block: int = 2048,
+    attn_stages: int = 1,
+) -> Tuple[jax.Array, Optional[Dict], jax.Array]:
+    """Returns (logits, new_caches, aux_loss)."""
+    x, positions = _embed_inputs(cfg, params, batch, compute_dtype)
+    x, new_caches, aux = _run_stack(
+        cfg,
+        params,
+        x,
+        positions,
+        mode=mode,
+        caches=caches,
+        pos=pos,
+        compute_dtype=compute_dtype,
+        remat=remat,
+        q_chunk=q_chunk,
+        unroll=unroll,
+        unroll_inner=unroll_inner,
+        kv_repeat=kv_repeat,
+        kv_dtype=kv_dtype,
+        kv_block=kv_block,
+        attn_stages=attn_stages,
+    )
+    x = rmsnorm(x, params["final_norm"], cfg.norm_eps)
+    if logits_mode == "last":
+        x = x[:, -1:]
+    logits = unembed(cfg, params["embed"], x, compute_dtype)
+    return logits, new_caches, aux
+
+
+def prefill(cfg, params, batch, **kw):
+    return forward(cfg, params, batch, mode="prefill", logits_mode="last", **kw)
+
+
+def decode_step(cfg, params, batch, caches, pos, **kw):
+    """One token step. ``batch`` holds (B,1) tokens or (B,1,d) frame embeds;
+    ``pos`` is the number of tokens already in the cache (scalar int32)."""
+    B = (
+        batch["frame_embeds"].shape[0]
+        if cfg.frontend == "audio"
+        else batch["tokens"].shape[0]
+    )
+    batch = dict(batch)
+    batch.setdefault("positions", jnp.broadcast_to(pos, (B, 1)).astype(jnp.int32))
+    return forward(
+        cfg, params, batch, mode="decode", caches=caches, pos=pos, logits_mode="last", **kw
+    )

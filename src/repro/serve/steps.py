@@ -1,0 +1,63 @@
+"""Serving steps: prefill (build cache + first token) and decode (one new
+token against an existing KV/SSM cache). ``decode_step`` is what the
+``decode_*`` / ``long_*`` dry-run cells lower."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import lm
+
+
+@dataclasses.dataclass(frozen=True)
+class ServeStepConfig:
+    compute_dtype: str = "bfloat16"
+    kv_dtype: str = "bfloat16"
+    kv_repeat: int = 1  # KV-head replication so heads divide the TP axis
+    kv_block: int = 2048  # flash-decoding block length
+    attn_stages: int = 1  # staged causal K-slicing in chunked prefill
+    q_chunk: int = 512
+    greedy: bool = True
+    unroll_scans: bool = False  # layer scans (decode: in-place cache aliasing)
+    unroll_inner: Optional[bool] = None  # attention block loops (cost runs)
+
+
+def make_prefill_step(cfg: ModelConfig, scfg: ServeStepConfig):
+    compute_dtype = jnp.dtype(scfg.compute_dtype)
+
+    def prefill_step(params, batch):
+        logits, caches, _ = lm.prefill(
+            cfg,
+            params,
+            batch,
+            compute_dtype=compute_dtype,
+            q_chunk=scfg.q_chunk,
+            unroll=scfg.unroll_scans,
+            kv_repeat=scfg.kv_repeat,
+            kv_dtype=jnp.dtype(scfg.kv_dtype),
+            attn_stages=scfg.attn_stages,
+        )
+        next_tok = jnp.argmax(logits[:, -1].astype(jnp.float32), axis=-1).astype(jnp.int32)
+        return next_tok, caches
+
+    return prefill_step
+
+
+def make_decode_step(cfg: ModelConfig, scfg: ServeStepConfig):
+    compute_dtype = jnp.dtype(scfg.compute_dtype)
+
+    def decode_step(params, caches, batch, pos):
+        logits, caches, _ = lm.decode_step(
+            cfg, params, batch, caches, pos,
+            compute_dtype=compute_dtype, unroll=scfg.unroll_scans,
+            unroll_inner=scfg.unroll_inner, kv_repeat=scfg.kv_repeat,
+            kv_block=scfg.kv_block,
+        )
+        next_tok = jnp.argmax(logits[:, -1].astype(jnp.float32), axis=-1).astype(jnp.int32)
+        return next_tok, caches
+
+    return decode_step

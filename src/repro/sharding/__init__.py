@@ -1,0 +1,17 @@
+from repro.sharding.partition import (
+    ParamSpec,
+    axis_rules,
+    constrain,
+    current_rules,
+    logical_to_spec,
+    named_sharding,
+)
+
+__all__ = [
+    "ParamSpec",
+    "axis_rules",
+    "constrain",
+    "current_rules",
+    "logical_to_spec",
+    "named_sharding",
+]

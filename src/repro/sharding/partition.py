@@ -1,0 +1,181 @@
+"""Logical-axis sharding: models annotate *logical* axes; the launch layer
+binds them to mesh axes via rules.
+
+Outside a rules context every annotation is a no-op, so smoke tests and
+benchmarks run single-device with zero overhead.  Divisibility is checked at
+binding time: a logical axis whose dimension does not divide the mesh-axis
+extent falls back to replication (e.g. mamba2's vocab of 50280 on a 16-way
+``model`` axis), which keeps every (arch x mesh) cell lowerable.
+"""
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+import threading
+from typing import Any, Callable, Dict, Optional, Sequence, Tuple, Union
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+MeshAxes = Union[None, str, Tuple[str, ...]]
+
+_STATE = threading.local()
+
+
+@dataclasses.dataclass
+class _Rules:
+    mesh: Mesh
+    mapping: Dict[str, MeshAxes]
+
+
+def current_rules() -> Optional[_Rules]:
+    return getattr(_STATE, "rules", None)
+
+
+@contextlib.contextmanager
+def axis_rules(mesh: Mesh, mapping: Dict[str, MeshAxes]):
+    prev = current_rules()
+    _STATE.rules = _Rules(mesh, dict(mapping))
+    try:
+        yield
+    finally:
+        _STATE.rules = prev
+
+
+def _axis_size(mesh: Mesh, axes: MeshAxes) -> int:
+    if axes is None:
+        return 1
+    if isinstance(axes, str):
+        axes = (axes,)
+    return int(np.prod([mesh.shape[a] for a in axes]))
+
+
+def logical_to_spec(
+    logical: Sequence[Optional[str]],
+    shape: Optional[Sequence[int]] = None,
+    rules: Optional[_Rules] = None,
+) -> P:
+    """Map a tuple of logical axis names to a PartitionSpec under the rules.
+
+    If ``shape`` is given, any axis whose dim is not divisible by the bound
+    mesh extent is replicated instead (with no error), and mesh axes are never
+    used twice in one spec (first logical axis wins).
+    """
+    rules = rules or current_rules()
+    if rules is None:
+        return P(*([None] * len(logical)))
+    used: set = set()
+    out = []
+    for i, name in enumerate(logical):
+        axes = rules.mapping.get(name) if name else None
+        if axes is None:
+            out.append(None)
+            continue
+        ax_tuple = (axes,) if isinstance(axes, str) else tuple(axes)
+        ax_tuple = tuple(a for a in ax_tuple if a not in used)
+        if not ax_tuple:
+            out.append(None)
+            continue
+        size = _axis_size(rules.mesh, ax_tuple)
+        if shape is not None and shape[i] % size != 0:
+            # try a prefix of the axes that divides
+            while ax_tuple and shape[i] % _axis_size(rules.mesh, ax_tuple) != 0:
+                ax_tuple = ax_tuple[:-1]
+            if not ax_tuple:
+                out.append(None)
+                continue
+        used.update(ax_tuple)
+        out.append(ax_tuple[0] if len(ax_tuple) == 1 else ax_tuple)
+    return P(*out)
+
+
+def named_sharding(logical: Sequence[Optional[str]], shape=None) -> Optional[NamedSharding]:
+    rules = current_rules()
+    if rules is None:
+        return None
+    return NamedSharding(rules.mesh, logical_to_spec(logical, shape, rules))
+
+
+def constrain(x: jax.Array, *logical: Optional[str]) -> jax.Array:
+    """with_sharding_constraint against the active rules (no-op without)."""
+    rules = current_rules()
+    if rules is None:
+        return x
+    spec = logical_to_spec(logical, x.shape, rules)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(rules.mesh, spec))
+
+
+@dataclasses.dataclass
+class ParamSpec:
+    """Single source of truth for one parameter tensor."""
+
+    shape: Tuple[int, ...]
+    logical: Tuple[Optional[str], ...]
+    init: str = "normal"  # normal | zeros | ones | small_normal | custom
+    dtype: Any = None  # overrides model default (e.g. f32 for norms)
+    init_fn: Optional[Callable] = None
+
+    def initialize(self, key, default_dtype):
+        import jax.numpy as jnp
+
+        dtype = self.dtype or default_dtype
+        if self.init_fn is not None:
+            return self.init_fn(key, self.shape, dtype)
+        if self.init == "zeros":
+            return jnp.zeros(self.shape, dtype)
+        if self.init == "ones":
+            return jnp.ones(self.shape, dtype)
+        scale = 0.02 if self.init == "normal" else 0.006
+        fanin_last2 = self.init == "fanin"
+        if fanin_last2 and len(self.shape) >= 2:
+            scale = self.shape[-2] ** -0.5
+        return (jax.random.normal(key, self.shape) * scale).astype(dtype)
+
+
+def map_specs(specs, fn):
+    """Apply fn to every ParamSpec leaf of a nested structure."""
+    if isinstance(specs, ParamSpec):
+        return fn(specs)
+    if isinstance(specs, dict):
+        return {k: map_specs(v, fn) for k, v in specs.items()}
+    if isinstance(specs, (list, tuple)):
+        return type(specs)(map_specs(v, fn) for v in specs)
+    return specs
+
+
+def init_from_specs(specs, key, dtype):
+    """Materialize parameters from a ParamSpec tree with per-leaf keys."""
+    leaves = []
+
+    def collect(s):
+        leaves.append(s)
+        return s
+
+    map_specs(specs, collect)
+    keys = jax.random.split(key, max(len(leaves), 1))
+    it = iter(range(len(leaves)))
+
+    def build(s: ParamSpec):
+        i = next(it)
+        return s.initialize(keys[i], dtype)
+
+    return map_specs(specs, build)
+
+
+def abstract_from_specs(specs, dtype):
+    import jax.numpy as jnp
+
+    def build(s: ParamSpec):
+        return jax.ShapeDtypeStruct(s.shape, s.dtype or dtype)
+
+    return map_specs(specs, build)
+
+
+def shardings_from_specs(specs, dtype=None):
+    """NamedSharding tree for the current rules (None tree without rules)."""
+
+    def build(s: ParamSpec):
+        return named_sharding(s.logical, s.shape)
+
+    return map_specs(specs, build)

@@ -1,0 +1,77 @@
+"""Training loop with checkpoint/restart, health hooks, and failure
+injection (for tests/examples). CPU-scale here; the pjit path is exercised
+by launch/dryrun at the production mesh."""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Callable, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.data.synthetic import DataConfig, SyntheticLM
+from repro.ft.manager import CheckpointManager
+from repro.train.steps import TrainStepConfig, init_train_state, make_train_step
+
+
+@dataclasses.dataclass
+class LoopConfig:
+    steps: int = 50
+    ckpt_every: int = 10
+    log_every: int = 10
+    seed: int = 0
+    fail_at_step: Optional[int] = None  # failure injection
+
+
+class SimulatedFailure(RuntimeError):
+    pass
+
+
+def train_loop(
+    cfg: ModelConfig,
+    tcfg: TrainStepConfig,
+    lcfg: LoopConfig,
+    data: SyntheticLM,
+    mgr: Optional[CheckpointManager] = None,
+    on_step: Optional[Callable[[int, Dict], None]] = None,
+) -> Dict:
+    """Runs/resumes training; returns final metrics + history."""
+    step_fn = jax.jit(make_train_step(cfg, tcfg))
+
+    start = 0
+    state = None
+    if mgr is not None and mgr.latest_step() is not None:
+        restored, start = mgr.restore()
+        params, opt = restored["params"], restored["opt"]
+        params = jax.tree.map(jnp.asarray, params)
+        opt = jax.tree.map(jnp.asarray, opt)
+        start += 1
+    else:
+        params, opt = init_train_state(cfg, jax.random.PRNGKey(lcfg.seed))
+
+    losses: List[float] = []
+    t_begin = time.perf_counter()
+    for step in range(start, lcfg.steps):
+        if lcfg.fail_at_step is not None and step == lcfg.fail_at_step:
+            raise SimulatedFailure(f"injected failure at step {step}")
+        batch = {k: jnp.asarray(v) for k, v in data.batch_at(step).items()}
+        t0 = time.perf_counter()
+        params, opt, metrics = step_fn(params, opt, batch)
+        loss = float(metrics["loss"])
+        losses.append(loss)
+        if on_step is not None:
+            on_step(step, {"loss": loss, "step_s": time.perf_counter() - t0})
+        if mgr is not None and (step + 1) % lcfg.ckpt_every == 0:
+            mgr.save(step, {"params": params, "opt": opt})
+    if mgr is not None:
+        mgr.wait()
+    return {
+        "params": params,
+        "opt": opt,
+        "losses": losses,
+        "last_step": lcfg.steps - 1,
+        "wall_s": time.perf_counter() - t_begin,
+    }

@@ -1,0 +1,128 @@
+"""Training step: vocab-sharded cross entropy, microbatched gradient
+accumulation, AdamW, donation."""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import lm
+from repro.sharding.partition import constrain
+from repro.train.optim import AdamWConfig, adamw_init, adamw_update
+
+
+@dataclasses.dataclass(frozen=True)
+class TrainStepConfig:
+    remat: str = "full"  # full | dots | dots_no_batch
+    compute_dtype: str = "bfloat16"
+    num_microbatches: int = 1
+    aux_coeff: float = 0.01
+    q_chunk: int = 2048
+    kv_repeat: int = 1  # KV-head replication so GQA scores shard on the TP axis
+    attn_stages: int = 1  # staged causal K-slicing in chunked attention
+    unroll_scans: bool = False  # cost-measurement variants only
+    optim: AdamWConfig = AdamWConfig()
+
+
+def default_microbatches(
+    cfg: ModelConfig, global_batch: int, n_data_shards: int, seq_len: int = 4096,
+    model_shards: int = 16,
+) -> int:
+    """Pick grad-accum so rematted scan carries + CE logits fit HBM/chip."""
+    per_dev = max(global_batch // max(n_data_shards, 1), 1)
+    reps_total = cfg.pattern_reps + len(cfg.remainder)
+    # non-divisible vocab (e.g. mamba2's 50280 on 16 shards) -> replicated logits
+    vocab_loc = (
+        cfg.vocab_size / model_shards
+        if cfg.vocab_size % model_shards == 0
+        else cfg.vocab_size
+    )
+    budget = 8e9
+    for mb in (1, 2, 4, 8, 16):
+        if per_dev % mb and mb != 1:
+            continue
+        tok = (per_dev / mb) * seq_len
+        carries = reps_total * tok * cfg.d_model * 2  # bf16 saved block inputs
+        logits = 3 * tok * vocab_loc * 4  # f32 logits + CE temps
+        if carries + logits <= budget:
+            return mb
+    return min(16, per_dev) or 1
+
+
+def softmax_xent(logits: jax.Array, targets: jax.Array) -> jax.Array:
+    """Mean CE over all positions. The target logit is extracted with a
+    masked sum (NOT take_along_axis: gathers on a vocab-sharded dim make
+    GSPMD replicate the logits); reductions over the sharded vocab dim lower
+    to psums under GSPMD."""
+    logits = logits.astype(jnp.float32)
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    iota = jax.lax.broadcasted_iota(jnp.int32, logits.shape, logits.ndim - 1)
+    mask = iota == targets[..., None].astype(jnp.int32)
+    tgt = jnp.sum(jnp.where(mask, logits, 0.0), axis=-1)
+    return jnp.mean(lse - tgt)
+
+
+def make_loss_fn(cfg: ModelConfig, tcfg: TrainStepConfig):
+    compute_dtype = jnp.dtype(tcfg.compute_dtype)
+
+    def loss_fn(params, batch):
+        logits, _, aux = lm.forward(
+            cfg,
+            params,
+            batch,
+            mode="train",
+            remat=tcfg.remat,
+            compute_dtype=compute_dtype,
+            q_chunk=tcfg.q_chunk,
+            kv_repeat=tcfg.kv_repeat,
+            attn_stages=tcfg.attn_stages,
+            unroll=tcfg.unroll_scans,
+        )
+        loss = softmax_xent(logits, batch["targets"])
+        return loss + tcfg.aux_coeff * aux, {"loss": loss, "aux": aux}
+
+    return loss_fn
+
+
+def make_train_step(cfg: ModelConfig, tcfg: TrainStepConfig):
+    loss_fn = make_loss_fn(cfg, tcfg)
+    grad_fn = jax.value_and_grad(loss_fn, has_aux=True)
+    n_mb = tcfg.num_microbatches
+
+    def train_step(params, opt, batch):
+        if n_mb <= 1:
+            (_, metrics), grads = grad_fn(params, batch)
+        else:
+
+            def mb_split(key, x):
+                ax = 1 if key == "positions" else 0  # positions are (3, B, S)
+                shp = x.shape[:ax] + (n_mb, x.shape[ax] // n_mb) + x.shape[ax + 1 :]
+                return jnp.moveaxis(x.reshape(shp), ax, 0)
+
+            mbs = {k: mb_split(k, v) for k, v in batch.items()}
+
+            def accum(carry, mb):
+                g_acc, l_acc = carry
+                (_, m), g = grad_fn(params, mb)
+                g_acc = jax.tree.map(lambda a, b: a + b.astype(jnp.float32), g_acc, g)
+                return (g_acc, l_acc + m["loss"]), None
+
+            g0 = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            (grads, loss_sum), _ = jax.lax.scan(accum, (g0, 0.0), mbs)
+            grads = jax.tree.map(lambda g: g / n_mb, grads)
+            metrics = {"loss": loss_sum / n_mb, "aux": jnp.zeros((), jnp.float32)}
+
+        params, opt, om = adamw_update(tcfg.optim, grads, opt, params)
+        metrics.update(om)
+        return params, opt, metrics
+
+    return train_step
+
+
+def init_train_state(cfg: ModelConfig, key, dtype=jnp.float32):
+    params = lm.init_params(cfg, key, dtype)
+    return params, adamw_init(params)

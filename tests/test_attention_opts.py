@@ -1,0 +1,58 @@
+"""Optimization levers must be output-invariant: staged causal/window-aware
+K-slicing and zero-padded heads change only the lowering, never the math."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.models import lm
+from repro.models.attention import attn_full
+
+
+def _layer0_attn(cfg, key=0):
+    params = lm.init_params(cfg, jax.random.PRNGKey(key), jnp.float32)
+    return jax.tree.map(lambda a: a[0], params["pattern"][0]["attn"])
+
+
+@pytest.mark.parametrize("arch,pidx", [("starcoder2-7b", 0), ("gemma3-27b", 0), ("gemma3-27b", 5)])
+@pytest.mark.parametrize("stages", [2, 4, 8])
+def test_staged_attention_invariant(arch, pidx, stages):
+    cfg = get_config(arch).reduced()
+    spec = cfg.pattern[pidx]
+    params = lm.init_params(cfg, jax.random.PRNGKey(0), jnp.float32)
+    p0 = jax.tree.map(lambda a: a[0], params["pattern"][pidx]["attn"])
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 64, cfg.d_model), jnp.float32)
+    pos = jnp.broadcast_to(jnp.arange(64), (2, 64))
+    y1, _ = attn_full(cfg, spec, p0, x, pos, jnp.float32, q_chunk=8, attn_stages=1)
+    ys, cs = attn_full(cfg, spec, p0, x, pos, jnp.float32, q_chunk=8,
+                       attn_stages=stages, return_cache=True)
+    np.testing.assert_allclose(np.asarray(y1), np.asarray(ys), rtol=1e-5, atol=1e-5)
+    assert cs["k"].shape[2] == min(spec.window or 64, 64)
+
+
+def test_padded_heads_zero_weights_are_identity():
+    """Extending n_heads with zero wq/wo columns must not change outputs."""
+    cfg = get_config("starcoder2-7b").reduced()  # 4 heads reduced
+    cfg = dataclasses.replace(cfg, n_kv_heads=1)
+    params = lm.init_params(cfg, jax.random.PRNGKey(0), jnp.float32)
+    p0 = jax.tree.map(lambda a: a[0], params["pattern"][0]["attn"])
+    spec = cfg.pattern[0]
+    x = jax.random.normal(jax.random.PRNGKey(1), (1, 16, cfg.d_model), jnp.float32)
+    pos = jnp.broadcast_to(jnp.arange(16), (1, 16))
+    y_base, _ = attn_full(cfg, spec, p0, x, pos, jnp.float32)
+
+    cfg_pad = dataclasses.replace(cfg, n_heads=8, head_dim=cfg.hd)
+    hd = cfg.hd
+    extra = (cfg_pad.n_heads - cfg.n_heads) * hd
+    p_pad = dict(p0)
+    p_pad["wq"] = jnp.concatenate(
+        [p0["wq"], jnp.zeros((cfg.d_model, extra), jnp.float32)], axis=1
+    )
+    p_pad["wo"] = jnp.concatenate(
+        [p0["wo"], jnp.zeros((extra, cfg.d_model), jnp.float32)], axis=0
+    )
+    y_pad, _ = attn_full(cfg_pad, spec, p_pad, x, pos, jnp.float32)
+    np.testing.assert_allclose(np.asarray(y_base), np.asarray(y_pad), rtol=1e-5, atol=1e-5)

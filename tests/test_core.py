@@ -1,0 +1,230 @@
+"""Core snapshot/restore tests: JIF round-trips, overlay dedup invariants,
+pipelined restore correctness, baselines, pool/cache behaviour."""
+import os
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (
+    BaseImage,
+    BufferPool,
+    NodeImageCache,
+    SpiceRestorer,
+    snapshot,
+)
+from repro.core import baselines, overlay
+from repro.core.treeutil import flatten_state, unflatten_state
+
+PAGE = 4096  # small pages keep tests fast
+
+
+def rng_state(seed=0, scale=1):
+    r = np.random.RandomState(seed)
+    return {
+        "embed": {"tok": r.randn(64 * scale, 32).astype(np.float32)},
+        "layers": [
+            {
+                "w": r.randn(32, 64).astype(np.float32),
+                "b": np.zeros((2048,), np.float32),  # zero chunks
+            }
+            for _ in range(3)
+        ],
+        "step": np.int64(7),
+    }
+
+
+def assert_state_equal(a, b):
+    la, _ = flatten_state(a)
+    lb, _ = flatten_state(b)
+    assert [n for n, _ in la] == [n for n, _ in lb]
+    for (n, x), (_, y) in zip(la, lb):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y), err_msg=n)
+
+
+# ------------------------------------------------------------------ treeutil
+def test_tree_roundtrip():
+    state = rng_state()
+    leaves, desc = flatten_state(state)
+    rebuilt = unflatten_state(desc, dict(leaves))
+    assert_state_equal(state, rebuilt)
+
+
+# ------------------------------------------------------------------- overlay
+@given(
+    data=st.binary(min_size=0, max_size=PAGE * 7),
+    page=st.sampled_from([256, 1024, PAGE]),
+)
+@settings(max_examples=40, deadline=None)
+def test_interval_table_covers_everything(data, page):
+    if len(data) == 0:
+        return
+    buf = np.frombuffer(data, np.uint8)
+    kinds = overlay.classify(memoryview(buf), page)
+    table = overlay.IntervalTable(overlay.intervals_from_kinds(kinds))
+    assert table.n_pages == overlay.n_chunks(len(data), page)
+    for pg in range(table.n_pages):
+        kind, _ = table.lookup(pg)
+        assert kind == kinds[pg]
+
+
+@given(st.integers(0, 2**31 - 1))
+@settings(max_examples=20, deadline=None)
+def test_zero_detection(seed):
+    r = np.random.RandomState(seed)
+    n = r.randint(1, 6)
+    buf = np.zeros(n * PAGE, np.uint8)
+    dirty = set()
+    for _ in range(r.randint(0, n)):
+        i = r.randint(0, n)
+        buf[i * PAGE + r.randint(PAGE)] = 1 + r.randint(255)
+        dirty.add(i)
+    zm = overlay.zero_mask(memoryview(buf), PAGE)
+    assert set(np.flatnonzero(~zm)) == dirty
+
+
+def test_base_dedup_classification():
+    base_arr = np.arange(PAGE * 4, dtype=np.uint8)
+    priv = base_arr.copy()
+    priv[PAGE : PAGE + 1] += 1  # dirty page 1
+    dg = overlay.chunk_digests(memoryview(base_arr), PAGE)
+    kinds = overlay.classify(memoryview(priv), PAGE, dg)
+    assert kinds[0] == overlay.KIND_BASE
+    assert kinds[1] == overlay.KIND_PRIVATE
+    assert list(kinds[2:]) == [overlay.KIND_BASE, overlay.KIND_BASE]
+
+
+# ---------------------------------------------------------------- jif/spice
+def test_jif_roundtrip_no_base(tmp_path):
+    state = rng_state()
+    path = str(tmp_path / "f.jif")
+    stats = snapshot(state, path, page_size=PAGE)
+    assert stats.zero_bytes >= 3 * 2048 * 4 - PAGE  # the zero biases
+    restorer = SpiceRestorer()
+    got, meta, handles, rstats = restorer.restore(path)
+    assert_state_equal(state, got)
+    assert rstats.major_faults == 0
+    assert rstats.restore_ops == 1
+
+
+def test_jif_roundtrip_with_base(tmp_path):
+    base_state = rng_state(0)
+    state = rng_state(0)
+    # perturb one tensor slightly: most chunks should dedup to BASE
+    state["layers"][1]["w"] = state["layers"][1]["w"].copy()
+    state["layers"][1]["w"][0, 0] += 1.0
+
+    cache = NodeImageCache()
+    cache.put(BaseImage.from_state("base-v1", base_state, PAGE))
+
+    path = str(tmp_path / "f.jif")
+    stats = snapshot(state, path, base=cache.get("base-v1"), page_size=PAGE)
+    assert stats.base_bytes > 0
+    assert stats.private_bytes < stats.total_bytes - stats.zero_bytes
+
+    restorer = SpiceRestorer(node_cache=cache)
+    got, _, _, rstats = restorer.restore(path)
+    assert_state_equal(state, got)
+    assert rstats.base_bytes == stats.base_bytes
+    # dedup means we read less than the full image from "disk"
+    assert rstats.bytes_read <= stats.private_bytes + PAGE * stats.n_tensors
+
+
+def test_restore_missing_base_fails(tmp_path):
+    base_state = rng_state(0)
+    cache = NodeImageCache()
+    cache.put(BaseImage.from_state("base-v1", base_state, PAGE))
+    path = str(tmp_path / "f.jif")
+    snapshot(rng_state(0), path, base=cache.get("base-v1"), page_size=PAGE)
+    with pytest.raises(FileNotFoundError):
+        SpiceRestorer(node_cache=NodeImageCache()).restore(path)
+
+
+def test_access_order_layout(tmp_path):
+    state = rng_state()
+    names = [n for n, _ in flatten_state(state)[0]]
+    order = list(reversed(names))
+    path = str(tmp_path / "f.jif")
+    snapshot(state, path, access_order=order, page_size=PAGE)
+    got, meta, _, _ = SpiceRestorer().restore(path)
+    assert meta["access_order"] == order
+    assert_state_equal(state, got)
+
+
+def test_streaming_restore_overlap(tmp_path):
+    """wait=False returns handles immediately; tensors become ready in
+    access order and waiting per-tensor yields correct bytes."""
+    state = rng_state(3, scale=8)
+    path = str(tmp_path / "f.jif")
+    snapshot(state, path, page_size=PAGE)
+    ready_order = []
+    restorer = SpiceRestorer()
+    tree, meta, handles, _ = restorer.restore(
+        path, on_ready=lambda n, a: ready_order.append(n), wait=False
+    )
+    leaves, _ = flatten_state(state)
+    for name, arr in leaves:
+        got = handles[name].wait(10)
+        np.testing.assert_array_equal(got, np.asarray(arr))
+    assert ready_order == meta["access_order"]
+
+
+def test_trim_fn(tmp_path):
+    state = {"params": rng_state()["embed"], "opt": {"m": np.ones((4096,), np.float32)}}
+    path = str(tmp_path / "f.jif")
+    snapshot(state, path, page_size=PAGE, trim_fn=lambda s: {"params": s["params"]})
+    got, _, _, _ = SpiceRestorer().restore(path)
+    assert "opt" not in got
+
+
+# ------------------------------------------------------------------ baselines
+def test_criu_star_roundtrip(tmp_path):
+    state = rng_state()
+    d = str(tmp_path / "criu")
+    baselines.criu_star_snapshot(state, d)
+    got, stats = baselines.criu_star_restore(d)
+    assert_state_equal(state, got)
+    n = len(flatten_state(state)[0])
+    assert stats.restore_ops >= 3 * n  # per-resource replay
+
+def test_reap_star_roundtrip(tmp_path):
+    state = rng_state()
+    extra = {"opt": np.ones((4096,), np.float32)}
+    path = str(tmp_path / "mono.img")
+    baselines.monolith_snapshot(state, path, extra_state=extra)
+    got, stats = baselines.reap_star_restore(path)
+    assert_state_equal(state, got)
+    total = sum(np.asarray(a).nbytes for _, a in flatten_state(state)[0])
+    assert stats.bytes_read > total  # fetched the unused extra state too
+
+
+def test_faasnap_star_faults(tmp_path):
+    state = rng_state()
+    path = str(tmp_path / "mono.img")
+    baselines.monolith_snapshot(state, path)
+    r = baselines.FaasnapAsyncRestorer(path, lag_s=0.05)
+    # demand an out-of-order tensor immediately: must fault, still correct
+    arr = r.ensure("layers/2/w")
+    np.testing.assert_array_equal(arr, state["layers"][2]["w"])
+    assert r.stats.major_faults > 0
+    assert_state_equal(state, r.state())
+
+
+# ----------------------------------------------------------------- pool/cache
+def test_pool_zero_reuse():
+    pool = BufferPool(capacity_bytes=1 << 20)
+    b = pool.acquire(5000)
+    assert b.nbytes >= 5000 and not b.any()
+    b[:] = 7
+    pool.release(b)
+    b2 = pool.acquire(5000)
+    assert not b2.any()  # re-zeroed
+    assert pool.stats["hits"] == 1
+
+
+def test_node_cache_lru():
+    cache = NodeImageCache(capacity_bytes=1)  # force eviction
+    cache.put(BaseImage.from_state("a", {"x": np.ones(4096, np.float32)}))
+    cache.put(BaseImage.from_state("b", {"x": np.ones(4096, np.float32)}))
+    assert cache.get("a") is None
+    assert cache.get("b") is not None

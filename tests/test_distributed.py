@@ -1,0 +1,23 @@
+"""Run the 8-fake-device equivalence checks in a subprocess (jax locks the
+device count at first init, so the main pytest process can't host them)."""
+import os
+import subprocess
+import sys
+from pathlib import Path
+
+import pytest
+
+SCRIPT = Path(__file__).parent / "distributed_check.py"
+SRC = str(Path(__file__).resolve().parents[1] / "src")
+
+
+@pytest.mark.parametrize("which", ["moe", "moe_decode", "train", "elastic"])
+def test_distributed(which):
+    env = dict(os.environ, PYTHONPATH=SRC)
+    env.pop("XLA_FLAGS", None)
+    out = subprocess.run(
+        [sys.executable, str(SCRIPT), which],
+        capture_output=True, text=True, timeout=900, env=env,
+    )
+    assert out.returncode == 0, f"stdout:\n{out.stdout}\nstderr:\n{out.stderr[-3000:]}"
+    assert "DISTRIBUTED_CHECKS_PASSED" in out.stdout

@@ -1,0 +1,104 @@
+"""Serving engine: publish -> cold start under every restore mode -> warm;
+all modes must produce identical tokens; spice overlap must be observable."""
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config
+from repro.core import BaseImage
+from repro.models import lm
+from repro.serve.engine import ServerlessNode, layer_sequence, layerwise_state
+
+ARCH = "qwen1.5-0.5b"
+
+
+@pytest.fixture(scope="module")
+def node_with_fn(tmp_path_factory):
+    d = tmp_path_factory.mktemp("fns")
+    cfg = get_config(ARCH).reduced()
+    params = lm.init_params(cfg, jax.random.PRNGKey(0), jnp.float32)
+    node = ServerlessNode()
+    node.publish("f1", cfg, params, str(d), warm_ttl_s=60.0,
+                 extra_state={"opt_m": np.ones((1 << 16,), np.float32)})
+    return node, cfg
+
+
+PROMPT = np.array([[5, 6, 7, 8, 9, 10]], dtype=np.int32)
+
+
+def test_all_modes_agree(node_with_fn):
+    node, cfg = node_with_fn
+    outs = {}
+    for mode in ["spice", "spice_sync", "criu_star", "reap_star", "faasnap_star"]:
+        node.evict()
+        r = node.invoke("f1", PROMPT, max_new_tokens=6, mode=mode, cfg=cfg)
+        assert r.cold
+        outs[mode] = r.tokens
+    base = outs["spice"]
+    for mode, toks in outs.items():
+        np.testing.assert_array_equal(toks, base, err_msg=mode)
+    assert base.shape == (1, 6)
+
+
+def test_warm_path_matches_cold(node_with_fn):
+    node, cfg = node_with_fn
+    node.evict()
+    cold = node.invoke("f1", PROMPT, max_new_tokens=4, mode="spice", cfg=cfg)
+    warm = node.invoke("f1", PROMPT, max_new_tokens=4, cfg=cfg)
+    assert cold.cold and not warm.cold
+    np.testing.assert_array_equal(cold.tokens, warm.tokens)
+    assert warm.total_s <= cold.total_s + 1.0
+
+
+def test_generation_matches_lm_forward(node_with_fn):
+    """Engine layerwise generation == monolithic lm.prefill/decode path."""
+    node, cfg = node_with_fn
+    node.evict()
+    r = node.invoke("f1", PROMPT, max_new_tokens=3, mode="spice_sync", cfg=cfg)
+
+    params = lm.init_params(cfg, jax.random.PRNGKey(0), jnp.float32)
+    logits, caches, _ = lm.prefill(
+        cfg, params, {"tokens": jnp.asarray(PROMPT)}, compute_dtype=jnp.float32
+    )
+    toks = [int(jnp.argmax(logits[0, -1]))]
+    pos = PROMPT.shape[1]
+    for _ in range(2):
+        logits, caches, _ = lm.decode_step(
+            cfg, params, {"tokens": jnp.asarray([[toks[-1]]], jnp.int32)},
+            caches, jnp.int32(pos), compute_dtype=jnp.float32,
+        )
+        toks.append(int(jnp.argmax(logits[0, -1])))
+        pos += 1
+    np.testing.assert_array_equal(r.tokens[0], np.asarray(toks))
+
+
+def test_layerwise_state_roundtrip(node_with_fn):
+    node, cfg = node_with_fn
+    params = lm.init_params(cfg, jax.random.PRNGKey(0), jnp.float32)
+    state = layerwise_state(cfg, params)
+    assert len(state["layers"]) == cfg.n_layers
+    np.testing.assert_array_equal(
+        state["layers"][0]["attn"]["wq"], np.asarray(params["pattern"][0]["attn"]["wq"][0])
+    )
+
+
+def test_base_image_dedup_across_finetunes(tmp_path):
+    """Two functions sharing a base: the second one's JIF is mostly BASE."""
+    cfg = get_config(ARCH).reduced()
+    params = lm.init_params(cfg, jax.random.PRNGKey(0), jnp.float32)
+    node = ServerlessNode()
+    base_state = layerwise_state(cfg, params)
+    node.node_cache.put(BaseImage.from_state("base-lm", base_state))
+
+    # fine-tune: perturb only the first layer
+    ft = jax.tree.map(lambda a: a, params)
+    ft["pattern"][0]["attn"]["wq"] = ft["pattern"][0]["attn"]["wq"] + 0.5
+    from repro.core.snapshot import snapshot as jif_snapshot
+
+    stats = jif_snapshot(
+        layerwise_state(cfg, ft), str(tmp_path / "ft.jif"),
+        base=node.node_cache.get("base-lm"),
+    )
+    assert stats.base_bytes > 0.5 * stats.total_bytes
+    assert stats.private_bytes < 0.5 * stats.total_bytes

@@ -1,0 +1,30 @@
+"""The examples are part of the public API surface: run each end-to-end in
+a subprocess and assert it exits cleanly with the expected narrative."""
+import os
+import subprocess
+import sys
+from pathlib import Path
+
+import pytest
+
+ROOT = Path(__file__).resolve().parents[1]
+SRC = str(ROOT / "src")
+
+CASES = [
+    ("quickstart.py", "COLD start"),
+    ("overlay_finetunes.py", "base-image cache"),
+    ("train_ft.py", "resuming from step"),
+    ("serve_coldstart.py", "node cache"),
+]
+
+
+@pytest.mark.parametrize("script,needle", CASES)
+def test_example_runs(script, needle):
+    env = dict(os.environ, PYTHONPATH=SRC)
+    env.pop("XLA_FLAGS", None)
+    out = subprocess.run(
+        [sys.executable, str(ROOT / "examples" / script)],
+        capture_output=True, text=True, timeout=900, env=env,
+    )
+    assert out.returncode == 0, out.stderr[-3000:]
+    assert needle in out.stdout

@@ -1,0 +1,148 @@
+"""Per-kernel validation: interpret=True Pallas execution vs pure-jnp
+oracles, sweeping shapes and dtypes."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import overlay
+from repro.kernels.decode_attention.ops import decode_attention
+from repro.kernels.decode_attention.ref import decode_attention_ref
+from repro.kernels.flash_attention.ops import flash_attention
+from repro.kernels.flash_attention.ref import flash_attention_ref
+from repro.kernels.overlay_patch.ops import overlay_patch, plan_from_itable
+from repro.kernels.overlay_patch.ref import overlay_patch_ref
+from repro.kernels.ssd_scan.ops import ssd_scan
+from repro.kernels.ssd_scan.ref import ssd_scan_ref
+from repro.models.attention import quantize_kv
+
+
+def _tol(dtype):
+    return dict(rtol=2e-2, atol=2e-2) if dtype == jnp.bfloat16 else dict(rtol=2e-5, atol=2e-5)
+
+
+# ---------------------------------------------------------- overlay_patch
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16, jnp.int8])
+@pytest.mark.parametrize("n_pages,page", [(4, 128), (16, 256), (33, 512)])
+def test_overlay_patch(dtype, n_pages, page):
+    key = jax.random.PRNGKey(n_pages)
+    k1, k2, k3 = jax.random.split(key, 3)
+    base = (jax.random.normal(k1, (n_pages, page)) * 10).astype(dtype)
+    kinds = jax.random.randint(k2, (n_pages,), 0, 3)
+    n_priv = int(jnp.sum(kinds == overlay.KIND_PRIVATE))
+    priv = (jax.random.normal(k3, (max(n_priv, 1), page)) * 10).astype(dtype)
+    src = jnp.cumsum(kinds == overlay.KIND_PRIVATE) - 1
+    got = overlay_patch(base, priv, kinds, src, interpret=True)
+    want = overlay_patch_ref(base, priv, kinds, src)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_overlay_patch_from_itable():
+    """End-to-end: JIF interval table -> kernel plan -> patched tensor."""
+    page_bytes = 512
+    base_arr = np.random.RandomState(0).randn(page_bytes).astype(np.float32)
+    priv_arr = base_arr.copy()
+    priv_arr[128:256] = 7.0  # dirty page 1 (f32: 128 elems per 512B page)
+    priv_arr[384:] = 0.0  # zero page 3
+    dg = overlay.chunk_digests(memoryview(base_arr.tobytes()), page_bytes)
+    kinds_np = overlay.classify(memoryview(priv_arr.tobytes()), page_bytes, dg)
+    table = overlay.intervals_from_kinds(kinds_np)
+    cur = 0
+    for row in table:
+        if row[2] == overlay.KIND_PRIVATE:
+            row[3] = cur
+            cur += row[1]
+    it = overlay.IntervalTable(table)
+    kinds, src = plan_from_itable(it)
+
+    page_elems = page_bytes // 4
+    base2d = base_arr.reshape(-1, page_elems)
+    priv_pages = priv_arr.reshape(-1, page_elems)[kinds_np == overlay.KIND_PRIVATE]
+    got = overlay_patch(
+        jnp.asarray(base2d), jnp.asarray(priv_pages), jnp.asarray(kinds),
+        jnp.asarray(src), interpret=True,
+    )
+    np.testing.assert_array_equal(
+        np.asarray(got).reshape(-1), priv_arr
+    )
+
+
+# --------------------------------------------------------- flash_attention
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize(
+    "B,H,kvH,S,hd,window",
+    [
+        (1, 4, 4, 256, 64, None),
+        (2, 4, 2, 256, 128, None),
+        (1, 8, 2, 512, 64, 128),  # GQA + sliding window
+        (2, 2, 1, 128, 32, None),
+    ],
+)
+def test_flash_attention(dtype, B, H, kvH, S, hd, window):
+    keys = jax.random.split(jax.random.PRNGKey(hash((B, H, S)) % 2**31), 3)
+    q = jax.random.normal(keys[0], (B, H, S, hd)).astype(dtype)
+    k = jax.random.normal(keys[1], (B, kvH, S, hd)).astype(dtype)
+    v = jax.random.normal(keys[2], (B, kvH, S, hd)).astype(dtype)
+    got = flash_attention(q, k, v, window=window, block_q=64, block_k=64, interpret=True)
+    want = flash_attention_ref(q, k, v, window=window)
+    np.testing.assert_allclose(
+        np.asarray(got, np.float32), np.asarray(want, np.float32), **_tol(dtype)
+    )
+
+
+# -------------------------------------------------------- decode_attention
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize(
+    "B,H,kvH,Sc,hd,pos",
+    [(2, 8, 2, 512, 64, 311), (1, 4, 4, 256, 128, 255), (2, 16, 2, 1024, 64, 7)],
+)
+def test_decode_attention(dtype, B, H, kvH, Sc, hd, pos):
+    keys = jax.random.split(jax.random.PRNGKey(pos), 3)
+    q = jax.random.normal(keys[0], (B, H, hd)).astype(dtype)
+    k = jax.random.normal(keys[1], (B, kvH, Sc, hd)).astype(dtype)
+    v = jax.random.normal(keys[2], (B, kvH, Sc, hd)).astype(dtype)
+    got = decode_attention(q, k, v, jnp.int32(pos), block_k=128, interpret=True)
+    want = decode_attention_ref(q, k, v, jnp.int32(pos))
+    np.testing.assert_allclose(
+        np.asarray(got, np.float32), np.asarray(want, np.float32), **_tol(dtype)
+    )
+
+
+def test_decode_attention_int8_kv():
+    B, H, kvH, Sc, hd, pos = 2, 8, 2, 512, 64, 400
+    keys = jax.random.split(jax.random.PRNGKey(0), 3)
+    q = jax.random.normal(keys[0], (B, H, hd)).astype(jnp.float32)
+    k = jax.random.normal(keys[1], (B, kvH, Sc, hd)).astype(jnp.float32)
+    v = jax.random.normal(keys[2], (B, kvH, Sc, hd)).astype(jnp.float32)
+    kq, ks = quantize_kv(k)
+    vq, vs = quantize_kv(v)
+    got = decode_attention(q, kq, vq, jnp.int32(pos), ks, vs, block_k=128, interpret=True)
+    want = decode_attention_ref(q, kq, vq, jnp.int32(pos), ks, vs)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=2e-4, atol=2e-4)
+    # and close to the unquantized answer (int8 error bound)
+    exact = decode_attention_ref(q, k, v, jnp.int32(pos))
+    np.testing.assert_allclose(np.asarray(got), np.asarray(exact), rtol=0.1, atol=0.05)
+
+
+# --------------------------------------------------------------- ssd_scan
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize(
+    "B,S,H,G,P,N,chunk",
+    [(1, 256, 4, 1, 64, 32, 64), (2, 128, 8, 2, 32, 16, 32), (1, 512, 2, 1, 64, 64, 128)],
+)
+def test_ssd_scan(dtype, B, S, H, G, P, N, chunk):
+    keys = jax.random.split(jax.random.PRNGKey(S + H), 4)
+    x = (jax.random.normal(keys[0], (B, S, H, P)) * 0.5).astype(dtype)
+    # negative decay logs, moderate magnitude for numerical comparability
+    a = -jax.nn.softplus(jax.random.normal(keys[1], (B, H, S))).astype(jnp.float32) * 0.3
+    Bm = (jax.random.normal(keys[2], (B, S, G, N)) * 0.5).astype(dtype)
+    Cm = (jax.random.normal(keys[3], (B, S, G, N)) * 0.5).astype(dtype)
+    y, st = ssd_scan(x, a, Bm, Cm, chunk=chunk, interpret=True)
+    y_ref, st_ref = ssd_scan_ref(x, a, Bm, Cm, chunk=chunk)
+    tol = dict(rtol=5e-2, atol=5e-2) if dtype == jnp.bfloat16 else dict(rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(
+        np.asarray(y, np.float32), np.asarray(y_ref, np.float32), **tol
+    )
+    np.testing.assert_allclose(
+        np.asarray(st, np.float32), np.asarray(st_ref, np.float32), **tol
+    )

@@ -1,0 +1,139 @@
+"""Hypothesis property tests on system invariants."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import SpiceRestorer, snapshot
+from repro.core import overlay
+from repro.core.treeutil import flatten_state, leaf_names, unflatten_state
+from repro.models.attention import dequantize_kv, quantize_kv
+from repro.train.steps import softmax_xent
+
+PAGE = 1024
+
+# ---------------------------------------------------------- state strategies
+dtypes = st.sampled_from([np.float32, np.int32, np.uint8, np.float16])
+
+
+@st.composite
+def arrays(draw):
+    dt = draw(dtypes)
+    shape = tuple(draw(st.lists(st.integers(1, 5), min_size=0, max_size=3)))
+    seed = draw(st.integers(0, 2**31 - 1))
+    r = np.random.RandomState(seed)
+    a = (np.asarray(r.randn(*shape)) * 100).astype(dt)  # 0-d safe
+    return a
+
+
+@st.composite
+def state_trees(draw, depth=2):
+    if depth == 0:
+        return draw(arrays())
+    kind = draw(st.sampled_from(["leaf", "dict", "list"]))
+    if kind == "leaf":
+        return draw(arrays())
+    n = draw(st.integers(1, 3))
+    if kind == "dict":
+        keys = draw(
+            st.lists(st.text("abcdef", min_size=1, max_size=4), min_size=n,
+                     max_size=n, unique=True)
+        )
+        return {k: draw(state_trees(depth=depth - 1)) for k in keys}
+    return [draw(state_trees(depth=depth - 1)) for _ in range(n)]
+
+
+@given(state_trees())
+@settings(max_examples=25, deadline=None)
+def test_jif_roundtrip_any_tree(tmp_path_factory, tree):
+    d = tmp_path_factory.mktemp("prop")
+    path = str(d / "t.jif")
+    snapshot(tree, path, page_size=PAGE)
+    got, _, _, _ = SpiceRestorer().restore(path)
+    la, _ = flatten_state(tree)
+    lb, _ = flatten_state(got)
+    assert [n for n, _ in la] == [n for n, _ in lb]
+    for (n, x), (_, y) in zip(la, lb):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y), err_msg=n)
+
+
+@given(state_trees())
+@settings(max_examples=25, deadline=None)
+def test_tree_flatten_names_stable(tree):
+    leaves, desc = flatten_state(tree)
+    assert [n for n, _ in leaves] == leaf_names(desc)
+    rebuilt = unflatten_state(desc, dict(leaves))
+    leaves2, desc2 = flatten_state(rebuilt)
+    assert [n for n, _ in leaves] == [n for n, _ in leaves2]
+
+
+# --------------------------------------------------------- overlay invariants
+@given(st.binary(min_size=1, max_size=PAGE * 9), st.booleans())
+@settings(max_examples=40, deadline=None)
+def test_classification_accounting(data, with_base):
+    buf = np.frombuffer(data, np.uint8)
+    base = None
+    if with_base:
+        b = buf.copy()
+        if len(b) > PAGE:
+            b[:PAGE] = ~b[:PAGE]  # first page always differs
+        base = overlay.chunk_digests(memoryview(b.tobytes()), PAGE)
+    kinds = overlay.classify(memoryview(buf), PAGE, base)
+    table = overlay.IntervalTable(overlay.intervals_from_kinds(kinds))
+    counts = table.counts()
+    assert sum(counts.values()) == overlay.n_chunks(len(buf), PAGE)
+    # intervals are sorted, non-overlapping, alternating kinds
+    t = table.table
+    for i in range(1, len(t)):
+        assert t[i, 0] == t[i - 1, 0] + t[i - 1, 1]
+        assert t[i, 2] != t[i - 1, 2]
+
+
+@given(st.integers(0, 2**31 - 1), st.integers(1, 64))
+@settings(max_examples=30, deadline=None)
+def test_kv_quantization_error_bound(seed, sc):
+    r = np.random.RandomState(seed)
+    x = jnp.asarray(r.randn(2, 3, sc, 16).astype(np.float32) * r.uniform(0.01, 10))
+    q, scale = quantize_kv(x)
+    deq = dequantize_kv(q, scale, jnp.float32)
+    # max per-vector error <= scale/2 + eps (symmetric rounding)
+    err = np.abs(np.asarray(deq - x))
+    bound = np.asarray(scale)[..., None] * 0.51 + 1e-6
+    assert (err <= bound).all()
+
+
+# ------------------------------------------------------------- loss identity
+@given(st.integers(0, 2**31 - 1))
+@settings(max_examples=20, deadline=None)
+def test_masked_xent_equals_gather_xent(seed):
+    r = np.random.RandomState(seed)
+    logits = jnp.asarray(r.randn(2, 5, 17).astype(np.float32))
+    targets = jnp.asarray(r.randint(0, 17, size=(2, 5)))
+    got = softmax_xent(logits, targets)
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    tgt = jnp.take_along_axis(logits, targets[..., None], axis=-1)[..., 0]
+    want = jnp.mean(lse - tgt)
+    np.testing.assert_allclose(float(got), float(want), rtol=1e-6)
+
+
+# -------------------------------------------------------------- ssd property
+@given(st.integers(0, 2**31 - 1))
+@settings(max_examples=10, deadline=None)
+def test_ssd_chunking_invariance(seed):
+    """SSD output must not depend on the chunk size."""
+    from repro.models.mamba2 import ssd
+
+    r = np.random.RandomState(seed)
+    B, S, H, P, N = 1, 32, 2, 8, 4
+    x = jnp.asarray(r.randn(B, S, H, P).astype(np.float32) * 0.5)
+    a = -jnp.asarray(np.abs(r.randn(B, S, H)).astype(np.float32) * 0.3)
+    Bm = jnp.asarray(r.randn(B, S, 1, N).astype(np.float32) * 0.5)
+    Cm = jnp.asarray(r.randn(B, S, 1, N).astype(np.float32) * 0.5)
+    y8, st8 = ssd(x, a, Bm, Cm, 8)
+    y16, st16 = ssd(x, a, Bm, Cm, 16)
+    y32, st32 = ssd(x, a, Bm, Cm, 32)
+    np.testing.assert_allclose(np.asarray(y8), np.asarray(y16), rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(np.asarray(y16), np.asarray(y32), rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(np.asarray(st8), np.asarray(st32), rtol=1e-4, atol=1e-4)
