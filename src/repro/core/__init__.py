@@ -9,6 +9,7 @@ from repro.core.overlay import (
     KIND_ZERO,
     IntervalTable,
 )
+from repro.core.iosched import IOStream, PrefetchIOScheduler
 from repro.core.pool import BufferPool
 from repro.core.restore import RestoreStats, SpiceRestorer, TensorHandle
 from repro.core.snapshot import SnapshotStats, snapshot
@@ -18,6 +19,8 @@ __all__ = [
     "BaseImage",
     "NodeImageCache",
     "BufferPool",
+    "IOStream",
+    "PrefetchIOScheduler",
     "SpiceRestorer",
     "TensorHandle",
     "RestoreStats",

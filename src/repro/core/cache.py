@@ -76,6 +76,11 @@ class NodeImageCache:
             self._images.move_to_end(name)
             return img
 
+    def note_base_served(self, nbytes: int) -> None:
+        """Restorers report BASE bytes they memcpy'd (thread-safe)."""
+        with self._lock:
+            self.stats["base_bytes_served"] += nbytes
+
     def _evict(self):
         while sum(i.nbytes for i in self._images.values()) > self.capacity and len(self._images) > 1:
             self._images.popitem(last=False)

@@ -56,7 +56,7 @@ class BufferPool:
                 self._held -= sc
                 self.stats["hits"] += 1
                 return buf
-        self.stats["misses"] += 1
+            self.stats["misses"] += 1
         return np.zeros(sc, np.uint8)
 
     def release(self, buf: np.ndarray, dirty: bool = True) -> None:
@@ -72,4 +72,15 @@ class BufferPool:
             self.stats["released"] += 1
 
     def note_zero_chunks(self, nbytes: int) -> None:
-        self.stats["zero_bytes_avoided"] += nbytes
+        with self._lock:
+            self.stats["zero_bytes_avoided"] += nbytes
+
+    @property
+    def held_bytes(self) -> int:
+        """Bytes currently resident in the free lists (thread-safe)."""
+        with self._lock:
+            return self._held
+
+    def snapshot_stats(self) -> Dict[str, int]:
+        with self._lock:
+            return dict(self.stats)

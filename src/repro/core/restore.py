@@ -5,27 +5,31 @@ Restore = batched metadata restore + pipelined, *guaranteed* memory restore:
 * metadata: ONE header decode rebuilds the full state structure (no
   per-resource replay); interval tables are raw int64 arrays (zero
   deserialization cost).
-* memory: a dedicated prefetcher thread streams the data segment with large
-  sequential reads in first-access order, filling pool buffers directly;
-  BASE chunks are memcpy'd from the node base-image cache concurrently
-  (VMA-creation/prefetch overlap, §4.2); ZERO chunks cost nothing (pool
-  buffers are pre-zeroed).  Completion is *tracked per tensor* — unlike
-  madvise-style hints, execution can wait on exactly the tensor it needs
-  and never takes a "major fault" on data that was requested but not loaded.
+* memory: chunk reads are submitted to a prefetch I/O scheduler (one shared
+  arbiter per node, or a private one for standalone restores) that streams
+  the data segment with large sequential reads in first-access order,
+  filling pool buffers directly; BASE chunks are memcpy'd from the node
+  base-image cache concurrently (VMA-creation/prefetch overlap, §4.2); ZERO
+  chunks cost nothing (pool buffers are pre-zeroed).  Completion is
+  *tracked per tensor* — unlike madvise-style hints, execution can wait on
+  exactly the tensor it needs and never takes a "major fault" on data that
+  was requested but not loaded.  Under contention, a wait on an unread
+  tensor demand-boosts its chunks to the head of the scheduler queue.
 """
 from __future__ import annotations
 
 import dataclasses
 import os
-import queue
 import threading
 import time
-from typing import Any, Callable, Dict, Iterator, List, Optional, Tuple
+from functools import partial
+from typing import Any, Callable, Dict, List, Optional, Tuple
 
 import numpy as np
 
 from repro.core import overlay
 from repro.core.cache import BaseImage, NodeImageCache
+from repro.core.iosched import IOStream, PrefetchIOScheduler
 from repro.core.jif import JifReader
 from repro.core.pool import BufferPool
 from repro.core.treeutil import unflatten_state
@@ -40,16 +44,52 @@ class RestoreStats:
     base_bytes: int = 0
     zero_bytes: int = 0
     io_ops: int = 0
+    demand_boosts: int = 0
     restore_ops: int = 1  # ONE batched metadata restore (vs CRIU's replay)
     major_faults: int = 0  # guaranteed population: always 0 for spice
 
+    # Snapshot consistency: the prefetcher mutates counters concurrently
+    # with readers (the engine reports stats while the stream is live), so
+    # every mutation happens under a lock and ``as_dict`` takes a coherent
+    # snapshot.  ``mark_complete`` fires once the last tensor finalized.
+    def __post_init__(self):
+        self._lock = threading.Lock()
+        self._complete = threading.Event()
+
+    def add(self, **deltas) -> None:
+        with self._lock:
+            for k, v in deltas.items():
+                setattr(self, k, getattr(self, k) + v)
+
+    def set_once(self, field: str, value) -> None:
+        with self._lock:
+            if not getattr(self, field):
+                setattr(self, field, value)
+
+    def mark_complete(self, total_s: float) -> None:
+        with self._lock:
+            self.total_s = total_s
+        self._complete.set()
+
+    def wait_complete(self, timeout: Optional[float] = None) -> bool:
+        return self._complete.wait(timeout)
+
+    @property
+    def complete(self) -> bool:
+        return self._complete.is_set()
+
     def as_dict(self):
-        return dataclasses.asdict(self)
+        with self._lock:
+            d = dataclasses.asdict(self)
+        d["complete"] = self.complete
+        return d
 
 
 class TensorHandle:
     """Tracked-completion handle (the anti-madvise): ``wait`` blocks until
-    the tensor is materialized; ``ready`` never lies."""
+    the tensor is materialized; ``ready`` never lies.  Waiting on an unread
+    tensor issues a demand boost to the I/O scheduler first, so execution
+    demand overtakes background prefetch of other tensors/functions."""
 
     def __init__(self, name: str, shape, dtype):
         self.name = name
@@ -57,14 +97,29 @@ class TensorHandle:
         self.dtype = dtype
         self._ev = threading.Event()
         self._arr: Optional[np.ndarray] = None
+        self._exc: Optional[BaseException] = None
+        self._demand: Optional[Callable[[], bool]] = None
 
     def set(self, arr: np.ndarray):
         self._arr = arr
         self._ev.set()
 
+    def fail(self, exc: BaseException) -> None:
+        """Release waiters with the restore failure instead of hanging."""
+        if not self._ev.is_set():
+            self._exc = exc
+            self._ev.set()
+
+    def attach_demand(self, fn: Callable[[], bool]) -> None:
+        self._demand = fn
+
     def wait(self, timeout: Optional[float] = None) -> np.ndarray:
+        if not self._ev.is_set() and self._demand is not None:
+            self._demand()
         if not self._ev.wait(timeout):
             raise TimeoutError(f"tensor {self.name} not restored in time")
+        if self._exc is not None:
+            raise RuntimeError(f"restore of {self.name} failed") from self._exc
         return self._arr
 
     @property
@@ -81,18 +136,23 @@ class SpiceRestorer:
         pipelined: bool = True,
         transform: Optional[Callable[[np.ndarray], Any]] = None,
         simulate_read_bw: Optional[float] = None,
+        iosched: Optional[PrefetchIOScheduler] = None,
+        stream_priority: int = 0,
     ):
-        """``transform`` runs on the prefetcher thread per completed tensor
-        (e.g. jnp.asarray = eager device install, off the critical path).
-        ``simulate_read_bw`` (bytes/s) sleeps during reads to model real
-        storage latency when files are page-cache resident (labeled runs
-        only)."""
+        """``transform`` runs on the scheduler's reader thread per completed
+        tensor (e.g. jnp.asarray = eager device install, off the critical
+        path).  ``simulate_read_bw`` (bytes/s) sleeps during reads to model
+        real storage latency when files are page-cache resident (labeled
+        runs only).  ``iosched`` is the node-shared prefetch scheduler; when
+        omitted a private one is created per restorer (standalone use)."""
         self.pool = pool or BufferPool()
         self.node_cache = node_cache or NodeImageCache()
         self.io_chunk_bytes = io_chunk_bytes
         self.pipelined = pipelined
         self.transform = transform
         self.simulate_read_bw = simulate_read_bw
+        self.iosched = iosched or PrefetchIOScheduler(name="spice-private")
+        self.stream_priority = stream_priority
 
     # ------------------------------------------------------------------
     def restore(
@@ -102,8 +162,10 @@ class SpiceRestorer:
         wait: bool = True,
     ) -> Tuple[Any, Dict, Dict[str, TensorHandle], RestoreStats]:
         """Returns (state, meta, handles, stats). With ``wait=False`` the
-        state tree contains TensorHandles being filled by the prefetcher —
-        callers overlap execution with restore by waiting per tensor."""
+        state tree contains TensorHandles being filled by the scheduler —
+        callers overlap execution with restore by waiting per tensor.  The
+        JIF reader is closed (and ``stats`` marked complete) when the last
+        tensor finalizes, whether or not the caller waited."""
         stats = RestoreStats()
         t0 = time.perf_counter()
         r = JifReader(path)
@@ -111,6 +173,7 @@ class SpiceRestorer:
         meta = r.meta
         base = self.node_cache.get((r.base_ref or {}).get("name"))
         if r.base_ref and base is None:
+            r.close()
             raise FileNotFoundError(
                 f"base image {r.base_ref['name']!r} not in node cache"
             )
@@ -130,76 +193,102 @@ class SpiceRestorer:
             if self.transform is not None:  # eager install (e.g. device put)
                 arr = self.transform(arr)
                 # the host staging buffer is no longer referenced: recycle it
-                # into the pool, re-zeroing on THIS (prefetcher) thread —
+                # into the pool, re-zeroing on THIS (reader) thread —
                 # allocation and zeroing stay off future critical paths
                 self.pool.release(buffers.pop(name), dirty=True)
             handles[name].set(arr)
+            stats.set_once("first_tensor_s", time.perf_counter() - t0)
             if on_ready is not None:
                 on_ready(name, arr)
 
-        def fill_base_zero(name: str) -> bool:
+        def fill_base_zero(name: str) -> int:
             """memcpy BASE runs from the node cache; ZERO runs are free.
-            Returns True if the tensor has no PRIVATE chunks at all."""
+            Costs no storage reads (returns 0 bytes for the arbiter)."""
             t = r.by_name[name]
             it = r.itable(name)
             ps = r.page_size
-            has_private = False
             for start, count, kind, _src in it.table:
                 if kind == overlay.KIND_PRIVATE:
-                    has_private = True
                     continue
                 nb = min(count * ps, t.nbytes - start * ps)
                 if kind == overlay.KIND_BASE:
                     src = base.chunk_bytes(name, int(start), int(count))[:nb]
                     buffers[name][start * ps : start * ps + nb] = src
-                    stats.base_bytes += nb
-                    self.node_cache.stats["base_bytes_served"] += nb
+                    stats.add(base_bytes=nb)
+                    self.node_cache.note_base_served(nb)
                 else:  # ZERO: pool buffers are pre-zeroed
-                    stats.zero_bytes += nb
+                    stats.add(zero_bytes=nb)
                     self.pool.note_zero_chunks(nb)
-            return not has_private
+            return 0
 
-        def prefetch():
-            """Sequential streaming over the data segment in access order."""
-            first_done = False
+        def read_op(name: str, src: int, dst_chunk: int, count: int) -> int:
+            """One large sequential read into the tensor's staging buffer."""
+            t = r.by_name[name]
+            ps = r.page_size
+            raw = r.pread_chunks(src, count)
+            if self.simulate_read_bw:
+                time.sleep(len(raw) / self.simulate_read_bw)
+            dst0 = dst_chunk * ps
+            nb = min(len(raw), t.nbytes - dst0)
+            buffers[name][dst0 : dst0 + nb] = np.frombuffer(raw[:nb], np.uint8)
+            stats.add(bytes_read=len(raw), io_ops=1)
+            return len(raw)
+
+        def tensor_ops(name: str) -> List[Callable[[], int]]:
+            ops: List[Callable[[], int]] = [partial(fill_base_zero, name)]
+            ps = r.page_size
+            chunk = max(self.io_chunk_bytes // ps, 1)
+            for start, count, src in r.itable(name).private_runs():
+                done = 0
+                while done < count:
+                    n = min(count - done, chunk)
+                    ops.append(partial(read_op, name, src + done, start + done, n))
+                    done += n
+            return ops
+
+        stream = self.iosched.open_stream(
+            name=os.path.basename(path),
+            priority=self.stream_priority,
+            inline=not self.pipelined,
+        )
+
+        def on_complete():
+            if stream.error is not None:
+                # failed stream: release every waiter with the error
+                for h in handles.values():
+                    h.fail(stream.error)
+            stats.mark_complete(time.perf_counter() - t0)
+            r.close()
+
+        stream._on_complete = on_complete
+        try:
             for name in order:
-                t = r.by_name[name]
-                only_shared = fill_base_zero(name)
-                ps = r.page_size
-                for start, count, src in r.itable(name).private_runs():
-                    # large sequential reads, io_chunk at a time
-                    done = 0
-                    while done < count:
-                        n = min(count - done, max(self.io_chunk_bytes // ps, 1))
-                        raw = r.pread_chunks(src + done, n)
-                        stats.io_ops += 1
-                        stats.bytes_read += len(raw)
-                        if self.simulate_read_bw:
-                            time.sleep(len(raw) / self.simulate_read_bw)
-                        dst0 = (start + done) * ps
-                        nb = min(len(raw), t.nbytes - dst0)
-                        buffers[name][dst0 : dst0 + nb] = np.frombuffer(
-                            raw[:nb], np.uint8
-                        )
-                        done += n
-                finalize(name)
-                if not first_done:
-                    stats.first_tensor_s = time.perf_counter() - t0
-                    first_done = True
-            stats.total_s = time.perf_counter() - t0
+                stream.submit(name, tensor_ops(name), partial(finalize, name))
+            stream.seal()
+        except BaseException as exc:
+            # never leave a half-submitted stream registered (it would pin
+            # the reader thread and leak the fd): fail it, which also runs
+            # on_complete -> r.close()
+            stream.abort(exc)
+            raise
+        for name, h in handles.items():
+            h.attach_demand(partial(self._boost, stream, stats, name))
 
-        if self.pipelined:
-            th = threading.Thread(target=prefetch, name="spice-prefetcher", daemon=True)
-            th.start()
-            if wait:
-                th.join()
-        else:
-            prefetch()
+        if not self.pipelined:
+            # synchronous path: drain on the caller's thread (no overlap)
+            self.iosched.drain_inline(stream)
+        elif wait:
+            stream.wait()
 
-        leaves = {name: handles[name] for name in handles}
+        leaves: Dict[str, Any] = {name: handles[name] for name in handles}
         if wait:
             leaves = {name: h.wait() for name, h in leaves.items()}
         state = unflatten_state(meta["tree"], leaves)
-        if wait:
-            r.close()
         return state, meta, handles, stats
+
+    @staticmethod
+    def _boost(stream: IOStream, stats: RestoreStats, name: str) -> bool:
+        if stream.boost(name):
+            stats.add(demand_boosts=1)
+            return True
+        return False

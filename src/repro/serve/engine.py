@@ -1,340 +1,109 @@
-"""Serverless serving engine: function instances cold-started from JIF
-snapshots with restore/execute overlap.
+"""Serverless serving engine — compatibility facade.
 
-The engine executes models layer by layer so the first layers run while the
-prefetcher is still streaming later layers from storage (the paper's §4.2
-"execution resumes immediately while the bulk of memory is fetched").  Layer
-readiness is *tracked* (TensorHandle events), never advisory.  Per-layer
-jitted functions act as the restored compile cache: metadata restore brings
-back cache *keys*, not re-traces.
+The monolithic ``ServerlessNode`` was split into a layered runtime:
+
+* :mod:`repro.core.iosched`   — node-wide prefetch I/O scheduler (per-stream
+  queues, demand boost, bandwidth arbitration),
+* :mod:`repro.serve.instance` — per-function lifecycle state machines
+  (COLD → RESTORING → WARM → EVICTED) + layer-gated generation,
+* :mod:`repro.serve.node`     — concurrent admission, keep-alive TTL, LRU
+  eviction under a shared memory budget.
+
+``ServerlessNode`` here is a thin facade over :class:`NodeScheduler` so the
+existing examples, benchmarks, and tests keep their `publish`/`invoke`/
+`evict` surface; new code should target the layers directly.
 """
 from __future__ import annotations
 
-import dataclasses
-import time
-from functools import partial
-from typing import Any, Callable, Dict, List, Optional, Tuple
+from typing import Optional
 
-import jax
-import jax.numpy as jnp
-import numpy as np
-
-from repro.configs.base import LayerSpec, ModelConfig
-from repro.core import (
-    BaseImage,
-    BufferPool,
-    FunctionRegistry,
-    FunctionSpec,
-    NodeImageCache,
-    SpiceRestorer,
-    snapshot,
+from repro.core import BufferPool, FunctionRegistry, NodeImageCache, PrefetchIOScheduler
+from repro.serve.instance import (  # re-exported: public serving helpers
+    FunctionInstance,
+    InstanceState,
+    generate,
+    layer_sequence,
+    layerwise_state,
+    wait_tree,
 )
-from repro.core import baselines
-from repro.core.restore import TensorHandle
-from repro.core.trace import trace_access_order
-from repro.core.treeutil import flatten_state
-from repro.models import blocks, lm
-from repro.models.layers import embed, rmsnorm, unembed
+from repro.serve.instance import wait_tree as _wait_tree  # legacy alias
+from repro.serve.node import (
+    FixedTTLPolicy,
+    InvokeResult,
+    KeepAlivePolicy,
+    NodeScheduler,
+    NoKeepAlive,
+)
 
-
-def layer_sequence(cfg: ModelConfig) -> List[LayerSpec]:
-    seq: List[LayerSpec] = []
-    for _ in range(cfg.pattern_reps):
-        seq.extend(cfg.pattern)
-    seq.extend(cfg.remainder)
-    return seq
-
-
-def layerwise_state(cfg: ModelConfig, params) -> Dict:
-    """Stacked (scan-form) params -> per-layer list (serving layout)."""
-    layers = []
-    for rep in range(cfg.pattern_reps):
-        for i in range(len(cfg.pattern)):
-            layers.append(
-                jax.tree.map(lambda a: np.asarray(a[rep]), params["pattern"][i])
-            )
-    for j in range(len(cfg.remainder)):
-        layers.append(jax.tree.map(np.asarray, params["remainder"][j]))
-    return {
-        "embed": jax.tree.map(np.asarray, params["embed"]),
-        "layers": layers,
-        "final_norm": np.asarray(params["final_norm"]),
-    }
-
-
-# ----------------------------------------------------------- compile cache
-_COMPILE_CACHE: Dict[Tuple, Any] = {}
-
-
-def _layer_fn(cfg: ModelConfig, spec: LayerSpec, mode: str):
-    key = ("layer", cfg.name, spec, mode)
-    if key not in _COMPILE_CACHE:
-
-        def fn(p, x, positions, cache, pos):
-            x, c, _ = blocks.apply_layer(
-                cfg, spec, p, x, positions=positions, mode=mode, cache=cache,
-                pos=pos, compute_dtype=jnp.float32,
-            )
-            return x, c
-
-        _COMPILE_CACHE[key] = jax.jit(fn)
-    return _COMPILE_CACHE[key]
-
-
-def _embed_fn(cfg: ModelConfig):
-    key = ("embed", cfg.name)
-    if key not in _COMPILE_CACHE:
-        _COMPILE_CACHE[key] = jax.jit(
-            lambda p, toks: embed(cfg, p, toks, jnp.float32)
-        )
-    return _COMPILE_CACHE[key]
-
-
-def _head_fn(cfg: ModelConfig):
-    key = ("head", cfg.name)
-    if key not in _COMPILE_CACHE:
-
-        def fn(p_embed, p_norm, x):
-            x = rmsnorm(x[:, -1:], p_norm, cfg.norm_eps)
-            logits = unembed(cfg, p_embed, x, jnp.float32)
-            return jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)
-
-        _COMPILE_CACHE[key] = jax.jit(fn)
-    return _COMPILE_CACHE[key]
-
-
-def _wait_tree(tree):
-    """Resolve TensorHandle leaves (blocking, tracked completion)."""
-    return jax.tree.map(
-        lambda leaf: leaf.wait() if isinstance(leaf, TensorHandle) else leaf,
-        tree,
-        is_leaf=lambda l: isinstance(l, TensorHandle),
-    )
-
-
-@dataclasses.dataclass
-class InvokeResult:
-    tokens: np.ndarray
-    cold: bool
-    mode: str
-    restore_wait_s: float = 0.0
-    ttft_s: float = 0.0
-    total_s: float = 0.0
-    stats: Optional[Dict] = None
+__all__ = [
+    "ServerlessNode",
+    "NodeScheduler",
+    "InvokeResult",
+    "KeepAlivePolicy",
+    "FixedTTLPolicy",
+    "NoKeepAlive",
+    "FunctionInstance",
+    "InstanceState",
+    "layer_sequence",
+    "layerwise_state",
+    "generate",
+    "wait_tree",
+]
 
 
 class ServerlessNode:
-    """One node: registry + base-image cache + buffer pool + warm instances."""
+    """One node: registry + base-image cache + buffer pool + warm instances.
+
+    Thin facade over :class:`NodeScheduler`; construction signature and the
+    ``publish`` / ``invoke`` / ``evict`` surface match the seed engine."""
 
     def __init__(
         self,
         registry: Optional[FunctionRegistry] = None,
         node_cache: Optional[NodeImageCache] = None,
         pool: Optional[BufferPool] = None,
+        scheduler: Optional[NodeScheduler] = None,
+        **scheduler_kwargs,
     ):
-        self.registry = registry or FunctionRegistry()
-        self.node_cache = node_cache or NodeImageCache()
-        self.pool = pool or BufferPool()
-        self._warm: Dict[str, Tuple[ModelConfig, Dict, float]] = {}
-
-    # -------------------------------------------------------------- publish
-    def publish(
-        self,
-        name: str,
-        cfg: ModelConfig,
-        params,
-        dirpath: str,
-        base_name: Optional[str] = None,
-        warm_ttl_s: float = 0.0,
-        formats: Tuple[str, ...] = ("jif", "criu", "monolith"),
-        extra_state: Optional[Any] = None,
-    ) -> FunctionSpec:
-        """Offline JIF preparation: layerwise layout, pre-warm + trace,
-        access-order relocation, dedup vs base; also writes the baselines'
-        formats for comparison."""
-        import os
-
-        os.makedirs(dirpath, exist_ok=True)
-        state = layerwise_state(cfg, params)
-
-        # pre-warm trace: run one tiny invocation under the recorder; the
-        # recorder's lazy leaves record first touch when jit coerces them
-        def run(view):
-            self._generate(cfg, None, view, np.zeros((1, 4), np.int32), 2)
-
-        order = trace_access_order(state, run, max_iters=2)
-        jif_path = f"{dirpath}/{name}.jif"
-        base = self.node_cache.get(base_name)
-        if "jif" in formats:
-            snapshot(
-                state,
-                jif_path,
-                base=base,
-                access_order=order,
-                meta={"arch": cfg.name, "function": name},
-            )
-        if "criu" in formats:
-            baselines.criu_star_snapshot(state, f"{dirpath}/{name}.criu")
-        if "monolith" in formats:
-            baselines.monolith_snapshot(
-                state, f"{dirpath}/{name}.mono", extra_state=extra_state
-            )
-        spec = FunctionSpec(
-            name=name, arch=cfg.name, jif_path=jif_path, base_image=base_name,
-            warm_ttl_s=warm_ttl_s,
-        )
-        self.registry.register(spec)
-        return spec
-
-    # --------------------------------------------------------------- invoke
-    def invoke(
-        self,
-        fname: str,
-        prompt: np.ndarray,
-        max_new_tokens: int = 8,
-        mode: str = "spice",
-        cfg: Optional[ModelConfig] = None,
-        simulate_read_bw: Optional[float] = None,
-    ) -> InvokeResult:
-        from repro.configs import get_config
-
-        spec = self.registry.get(fname)
-        cfg = cfg or get_config(spec.arch)
-        t0 = time.perf_counter()
-
-        warm = self._warm.get(fname)
-        if warm is not None:
-            _, state, _ = warm
-            toks, ttft = self._generate(cfg, None, state, prompt, max_new_tokens)
-            dt = time.perf_counter() - t0
-            return InvokeResult(toks, cold=False, mode="warm", ttft_s=ttft, total_s=dt)
-
-        state, stats, getter = self._cold_restore(spec, mode, simulate_read_bw)
-        restore_wait = time.perf_counter() - t0  # sync part of the restore
-        toks, ttft = self._generate(cfg, getter, state, prompt, max_new_tokens)
-        total = time.perf_counter() - t0
-        if spec.warm_ttl_s > 0:
-            self._warm[fname] = (cfg, _wait_tree(state), time.time() + spec.warm_ttl_s)
-        return InvokeResult(
-            toks, cold=True, mode=mode,
-            restore_wait_s=restore_wait,
-            ttft_s=restore_wait + ttft,  # time-to-first-token from request
-            total_s=total,
-            stats=stats.as_dict() if stats else None,
+        self._sched = scheduler or NodeScheduler(
+            registry=registry, node_cache=node_cache, pool=pool,
+            **scheduler_kwargs,
         )
 
-    def evict(self, fname: Optional[str] = None):
-        if fname is None:
-            self._warm.clear()
-        else:
-            self._warm.pop(fname, None)
+    # shared-component accessors (benchmarks swap the pool between runs)
+    @property
+    def scheduler(self) -> NodeScheduler:
+        return self._sched
 
-    # ----------------------------------------------------------- internals
-    def _cold_restore(self, spec: FunctionSpec, mode: str, sim_bw=None):
-        # eager install: numpy -> device array on the prefetcher thread (the
-        # PTE-install analogue), so execution never pays conversion copies.
-        # MUST copy: on CPU jnp.asarray can alias the staging buffer, which
-        # the restorer recycles into the zero pool (on TPU device_put always
-        # copies into HBM).
-        install = lambda a: jnp.array(a, copy=True)
-        if mode == "spice":
-            restorer = SpiceRestorer(
-                pool=self.pool, node_cache=self.node_cache,
-                transform=install, simulate_read_bw=sim_bw,
-            )
-            state, meta, handles, stats = restorer.restore(spec.jif_path, wait=False)
-            return state, stats, _wait_tree
-        if mode == "spice_sync":
-            restorer = SpiceRestorer(
-                pool=self.pool, node_cache=self.node_cache, pipelined=False,
-                transform=install, simulate_read_bw=sim_bw,
-            )
-            state, meta, handles, stats = restorer.restore(spec.jif_path, wait=True)
-            return state, stats, None
-        if mode == "criu_star":
-            state, stats = baselines.criu_star_restore(
-                spec.jif_path.replace(".jif", ".criu"), simulate_read_bw=sim_bw
-            )
-            return jax.tree.map(install, state), stats, None
-        if mode == "reap_star":
-            state, stats = baselines.reap_star_restore(
-                spec.jif_path.replace(".jif", ".mono"), simulate_read_bw=sim_bw
-            )
-            return jax.tree.map(install, state), stats, None
-        if mode == "faasnap_star":
-            r = baselines.FaasnapAsyncRestorer(
-                spec.jif_path.replace(".jif", ".mono"), simulate_read_bw=sim_bw
-            )
+    @property
+    def registry(self) -> FunctionRegistry:
+        return self._sched.registry
 
-            class _FaasnapView:
-                """state view whose tensors fault in on demand."""
+    @property
+    def node_cache(self) -> NodeImageCache:
+        return self._sched.node_cache
 
-            # rebuild a handle-like tree backed by ensure()
-            leaves = {
-                t["name"]: _FaasnapLeaf(r, t["name"])
-                for t in r.r.header["tensors"]
-                if not t["name"].startswith("__extra__/")
-            }
-            from repro.core.treeutil import unflatten_state
+    @property
+    def iosched(self) -> PrefetchIOScheduler:
+        return self._sched.iosched
 
-            state = unflatten_state(r.r.header["tree"], leaves)
-            return state, r.stats, _faasnap_wait
-        raise ValueError(f"unknown restore mode {mode!r}")
+    @property
+    def pool(self) -> BufferPool:
+        return self._sched.pool
 
-    def _generate(self, cfg, getter, state, prompt: np.ndarray, max_new: int):
-        """Layer-gated generation: each layer waits for exactly its params."""
-        # default resolver materializes any lazy leaves (access-trace
-        # proxies); a no-op for already-installed device arrays
-        resolve = getter or (
-            lambda t: jax.tree.map(lambda l: jnp.asarray(np.asarray(l)) if not isinstance(l, jax.Array) else l, t)
-        )
-        specs = layer_sequence(cfg)
-        B, S = prompt.shape
-        positions = np.broadcast_to(np.arange(S, dtype=np.int32), (B, S))
+    @pool.setter
+    def pool(self, new_pool: BufferPool) -> None:
+        self._sched.pool = new_pool
+        self._sched.memory_budget = new_pool.capacity
 
-        t0 = time.perf_counter()
-        p_embed = resolve(state["embed"])
-        x = _embed_fn(cfg)(p_embed, prompt)
-        caches = []
-        for i, spec in enumerate(specs):
-            p_i = resolve(state["layers"][i])
-            x, c = _layer_fn(cfg, spec, "prefill")(p_i, x, positions, None, None)
-            caches.append(c)
-        p_norm = resolve(state["final_norm"])
-        tok = _head_fn(cfg)(p_embed, p_norm, x)
-        ttft = time.perf_counter() - t0
-        out = [np.asarray(tok)]
+    def publish(self, *args, **kwargs):
+        return self._sched.publish(*args, **kwargs)
 
-        pos = S
-        for _ in range(max_new - 1):
-            x = _embed_fn(cfg)(p_embed, np.asarray(tok)[:, None])
-            dpos = np.broadcast_to(np.int32(pos), (B, 1))
-            for i, spec in enumerate(specs):
-                x, caches[i] = _layer_fn(cfg, spec, "decode")(
-                    state_layer(state, i, resolve), x, dpos, caches[i], jnp.int32(pos)
-                )
-            tok = _head_fn(cfg)(p_embed, p_norm, x)
-            out.append(np.asarray(tok))
-            pos += 1
-        return np.stack(out, axis=1), ttft
+    def invoke(self, *args, **kwargs) -> InvokeResult:
+        return self._sched.invoke(*args, **kwargs)
 
+    def submit(self, *args, **kwargs):
+        return self._sched.submit(*args, **kwargs)
 
-def state_layer(state, i, resolve):
-    return resolve(state["layers"][i])
-
-
-class _FaasnapLeaf:
-    def __init__(self, r, name):
-        self._r = r
-        self.name = name
-
-    def fault(self):
-        return self._r.ensure(self.name)
-
-
-def _faasnap_wait(tree):
-    return jax.tree.map(
-        lambda l: jnp.asarray(l.fault()) if isinstance(l, _FaasnapLeaf) else l,
-        tree,
-        is_leaf=lambda l: isinstance(l, _FaasnapLeaf),
-    )
+    def evict(self, fname: Optional[str] = None) -> None:
+        self._sched.evict(fname)

@@ -1,0 +1,298 @@
+"""Function instance lifecycle + layer-gated generation.
+
+One :class:`FunctionInstance` per published function per node, moving
+through an explicit state machine::
+
+    COLD ──begin_restore──▶ RESTORING ──promote──▶ WARM ──evict/TTL──▶ EVICTED
+      ▲                                                                  │
+      └────────────────────── (next invocation) ─────────────────────────┘
+
+The instance owns everything a live function needs: the restore handle tree
+(TensorHandles while the prefetcher streams), the resolver used to gate
+each layer on exactly its parameters, keep-alive/TTL accounting, and
+memory-footprint bookkeeping for the node's LRU eviction.  Invocations that
+arrive while a restore is in flight *join* it — they generate over the same
+handle tree, waiting per tensor, instead of issuing a second restore of the
+same snapshot.
+
+Generation executes models layer by layer so the first layers run while the
+prefetcher is still streaming later layers from storage (the paper's §4.2
+"execution resumes immediately while the bulk of memory is fetched").  Layer
+readiness is *tracked* (TensorHandle events), never advisory.  Per-layer
+jitted functions act as the restored compile cache: metadata restore brings
+back cache *keys*, not re-traces.
+"""
+from __future__ import annotations
+
+import enum
+import threading
+import time
+from typing import Any, Callable, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import LayerSpec, ModelConfig
+from repro.core.restore import RestoreStats, TensorHandle
+from repro.models import blocks
+from repro.models.layers import embed, rmsnorm, unembed
+
+
+def layer_sequence(cfg: ModelConfig) -> List[LayerSpec]:
+    seq: List[LayerSpec] = []
+    for _ in range(cfg.pattern_reps):
+        seq.extend(cfg.pattern)
+    seq.extend(cfg.remainder)
+    return seq
+
+
+def layerwise_state(cfg: ModelConfig, params) -> Dict:
+    """Stacked (scan-form) params -> per-layer list (serving layout)."""
+    layers = []
+    for rep in range(cfg.pattern_reps):
+        for i in range(len(cfg.pattern)):
+            layers.append(
+                jax.tree.map(lambda a: np.asarray(a[rep]), params["pattern"][i])
+            )
+    for j in range(len(cfg.remainder)):
+        layers.append(jax.tree.map(np.asarray, params["remainder"][j]))
+    return {
+        "embed": jax.tree.map(np.asarray, params["embed"]),
+        "layers": layers,
+        "final_norm": np.asarray(params["final_norm"]),
+    }
+
+
+# ----------------------------------------------------------- compile cache
+_COMPILE_CACHE: Dict[Tuple, Any] = {}
+_COMPILE_LOCK = threading.Lock()
+
+
+def _cached(key, build):
+    fn = _COMPILE_CACHE.get(key)
+    if fn is None:
+        with _COMPILE_LOCK:
+            fn = _COMPILE_CACHE.get(key)
+            if fn is None:
+                fn = _COMPILE_CACHE[key] = build()
+    return fn
+
+
+def _layer_fn(cfg: ModelConfig, spec: LayerSpec, mode: str):
+    def build():
+        def fn(p, x, positions, cache, pos):
+            x, c, _ = blocks.apply_layer(
+                cfg, spec, p, x, positions=positions, mode=mode, cache=cache,
+                pos=pos, compute_dtype=jnp.float32,
+            )
+            return x, c
+
+        return jax.jit(fn)
+
+    return _cached(("layer", cfg.name, spec, mode), build)
+
+
+def _embed_fn(cfg: ModelConfig):
+    return _cached(
+        ("embed", cfg.name),
+        lambda: jax.jit(lambda p, toks: embed(cfg, p, toks, jnp.float32)),
+    )
+
+
+def _head_fn(cfg: ModelConfig):
+    def build():
+        def fn(p_embed, p_norm, x):
+            x = rmsnorm(x[:, -1:], p_norm, cfg.norm_eps)
+            logits = unembed(cfg, p_embed, x, jnp.float32)
+            return jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)
+
+        return jax.jit(fn)
+
+    return _cached(("head", cfg.name), build)
+
+
+def wait_tree(tree):
+    """Resolve TensorHandle leaves (blocking, tracked completion)."""
+    return jax.tree.map(
+        lambda leaf: leaf.wait() if isinstance(leaf, TensorHandle) else leaf,
+        tree,
+        is_leaf=lambda l: isinstance(l, TensorHandle),
+    )
+
+
+def state_layer(state, i, resolve):
+    return resolve(state["layers"][i])
+
+
+def generate(cfg, getter, state, prompt: np.ndarray, max_new: int):
+    """Layer-gated generation: each layer waits for exactly its params.
+    Returns (tokens, ttft_s).  Read-only over ``state``; safe to run
+    concurrently from several invocations sharing one instance."""
+    # default resolver materializes any lazy leaves (access-trace
+    # proxies); a no-op for already-installed device arrays
+    resolve = getter or (
+        lambda t: jax.tree.map(lambda l: jnp.asarray(np.asarray(l)) if not isinstance(l, jax.Array) else l, t)
+    )
+    specs = layer_sequence(cfg)
+    B, S = prompt.shape
+    positions = np.broadcast_to(np.arange(S, dtype=np.int32), (B, S))
+
+    t0 = time.perf_counter()
+    p_embed = resolve(state["embed"])
+    x = _embed_fn(cfg)(p_embed, prompt)
+    caches = []
+    for i, spec in enumerate(specs):
+        p_i = resolve(state["layers"][i])
+        x, c = _layer_fn(cfg, spec, "prefill")(p_i, x, positions, None, None)
+        caches.append(c)
+    p_norm = resolve(state["final_norm"])
+    tok = _head_fn(cfg)(p_embed, p_norm, x)
+    ttft = time.perf_counter() - t0
+    out = [np.asarray(tok)]
+
+    pos = S
+    for _ in range(max_new - 1):
+        x = _embed_fn(cfg)(p_embed, np.asarray(tok)[:, None])
+        dpos = np.broadcast_to(np.int32(pos), (B, 1))
+        for i, spec in enumerate(specs):
+            x, caches[i] = _layer_fn(cfg, spec, "decode")(
+                state_layer(state, i, resolve), x, dpos, caches[i], jnp.int32(pos)
+            )
+        tok = _head_fn(cfg)(p_embed, p_norm, x)
+        out.append(np.asarray(tok))
+        pos += 1
+    return np.stack(out, axis=1), ttft
+
+
+class _FaasnapLeaf:
+    def __init__(self, r, name):
+        self._r = r
+        self.name = name
+
+    def fault(self):
+        return self._r.ensure(self.name)
+
+
+def faasnap_wait(tree):
+    return jax.tree.map(
+        lambda l: jnp.asarray(l.fault()) if isinstance(l, _FaasnapLeaf) else l,
+        tree,
+        is_leaf=lambda l: isinstance(l, _FaasnapLeaf),
+    )
+
+
+# ---------------------------------------------------------- instance state
+class InstanceState(enum.Enum):
+    COLD = "cold"
+    RESTORING = "restoring"
+    WARM = "warm"
+    EVICTED = "evicted"
+
+
+class FunctionInstance:
+    """Lifecycle container for one function on one node.
+
+    Transitions are driven by the :class:`~repro.serve.node.NodeScheduler`;
+    every mutation happens under ``cond``'s lock.  ``generation`` counts
+    restore generations — a new restore after eviction bumps it, so stale
+    joiners can detect they are looking at a dead tree."""
+
+    def __init__(self, spec, cfg: ModelConfig):
+        self.spec = spec
+        self.cfg = cfg
+        self.state = InstanceState.COLD
+        self.generation = 0
+        self.cond = threading.Condition()
+        self.tree: Optional[Any] = None          # handles while RESTORING,
+        self.getter: Optional[Callable] = None   # resolved arrays once WARM
+        self.restore_stats: Optional[RestoreStats] = None
+        self.restore_mode: Optional[str] = None
+        self.last_used = 0.0
+        self.warm_expiry = 0.0   # 0 = no keep-alive
+        self.memory_bytes = 0
+        self.inflight = 0
+        self.counters = {
+            "cold_starts": 0, "warm_hits": 0, "joined": 0,
+            "ttl_evictions": 0, "lru_evictions": 0,
+        }
+
+    # ------------------------------------------------------------ queries
+    def expired(self, now: Optional[float] = None) -> bool:
+        now = time.time() if now is None else now
+        return (
+            self.state is InstanceState.WARM
+            and self.warm_expiry > 0
+            and now >= self.warm_expiry
+        )
+
+    @property
+    def idle(self) -> bool:
+        return self.inflight == 0
+
+    # -------------------------------------------------------- transitions
+    # All four helpers assume ``self.cond`` is held by the caller.
+    def begin_restore(self, mode: str) -> int:
+        assert self.state in (InstanceState.COLD, InstanceState.EVICTED), self.state
+        self.state = InstanceState.RESTORING
+        self.generation += 1
+        self.restore_mode = mode
+        self.tree = None
+        self.getter = None
+        self.counters["cold_starts"] += 1
+        return self.generation
+
+    def publish_restore(self, tree, getter, stats) -> None:
+        assert self.state is InstanceState.RESTORING, self.state
+        self.tree = tree
+        self.getter = getter
+        self.restore_stats = stats
+        self.cond.notify_all()
+
+    def promote_warm(self, resolved_tree, ttl_s: float, now: float) -> None:
+        assert self.state is InstanceState.RESTORING, self.state
+        if ttl_s > 0:
+            self.state = InstanceState.WARM
+            self.tree = resolved_tree
+            self.getter = None
+            self.warm_expiry = now + ttl_s
+            self.memory_bytes = _tree_bytes(resolved_tree)
+        else:
+            # no keep-alive: drop straight back to COLD, free the state
+            self.state = InstanceState.COLD
+            self.tree = None
+            self.getter = None
+            self.warm_expiry = 0.0
+            self.memory_bytes = 0
+        self.last_used = now
+        self.cond.notify_all()
+
+    def evict(self, reason: str = "manual") -> bool:
+        """WARM → EVICTED (idle instances only).  Returns True if evicted."""
+        if self.state is not InstanceState.WARM or not self.idle:
+            return False
+        self.state = InstanceState.EVICTED
+        self.tree = None
+        self.getter = None
+        self.warm_expiry = 0.0
+        self.memory_bytes = 0
+        if reason == "ttl":
+            self.counters["ttl_evictions"] += 1
+        elif reason == "lru":
+            self.counters["lru_evictions"] += 1
+        return True
+
+    def abort_restore(self) -> None:
+        """RESTORING → EVICTED on a failed restore, releasing joiners."""
+        if self.state is InstanceState.RESTORING:
+            self.state = InstanceState.EVICTED
+            self.tree = None
+            self.getter = None
+            self.cond.notify_all()
+
+
+def _tree_bytes(tree) -> int:
+    total = 0
+    for leaf in jax.tree.leaves(tree):
+        total += getattr(leaf, "nbytes", 0)
+    return int(total)

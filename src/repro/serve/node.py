@@ -1,0 +1,434 @@
+"""Node scheduler: multi-tenant admission, keep-alive, and eviction.
+
+The serving stack is layered (bottom up):
+
+* ``repro.core.iosched``  — ONE prefetch I/O scheduler per node; every
+  concurrent restore submits chunk reads there (bandwidth arbitration +
+  demand boost).
+* ``repro.serve.instance`` — per-function lifecycle state machines that own
+  restore handles and generation state.
+* ``repro.serve.node``     — this module: admits concurrent invocations
+  through a thread pool, routes them warm / joined / cold, enforces
+  keep-alive TTLs and LRU eviction under a node memory budget shared with
+  the :class:`BufferPool`, and carries the offline publish path.
+
+Invocations of a function whose restore is already in flight *join* that
+restore (generate over the same tracked-handle tree) rather than re-reading
+the snapshot — the paper's single-population guarantee per node.
+"""
+from __future__ import annotations
+
+import dataclasses
+import threading
+import time
+from concurrent.futures import Future, ThreadPoolExecutor
+from functools import partial
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.core import (
+    BufferPool,
+    FunctionRegistry,
+    FunctionSpec,
+    NodeImageCache,
+    PrefetchIOScheduler,
+    SpiceRestorer,
+    snapshot,
+)
+from repro.core import baselines
+from repro.core.restore import RestoreStats
+from repro.core.trace import trace_access_order
+from repro.core.treeutil import unflatten_state
+from repro.serve.instance import (
+    FunctionInstance,
+    InstanceState,
+    _FaasnapLeaf,
+    faasnap_wait,
+    generate,
+    layerwise_state,
+    wait_tree,
+)
+
+
+@dataclasses.dataclass
+class InvokeResult:
+    tokens: np.ndarray
+    cold: bool
+    mode: str
+    restore_wait_s: float = 0.0
+    ttft_s: float = 0.0
+    total_s: float = 0.0
+    stats: Optional[Dict] = None
+    function: str = ""
+    queue_s: float = 0.0  # admission delay in the node's invoke pool
+    joined: bool = False  # rode an in-flight restore instead of starting one
+
+
+# ------------------------------------------------------------ keep-alive
+class KeepAlivePolicy:
+    """Pluggable keep-alive: decides each instance's warm TTL and which
+    warm instances to sacrifice under memory pressure (LRU default)."""
+
+    def ttl_for(self, spec: FunctionSpec) -> float:
+        return spec.warm_ttl_s
+
+    def victims(
+        self, warm: List[FunctionInstance], need_evict: int
+    ) -> List[FunctionInstance]:
+        """Pick eviction order among idle warm instances (LRU)."""
+        return sorted(warm, key=lambda i: i.last_used)
+
+
+class FixedTTLPolicy(KeepAlivePolicy):
+    """Same keep-alive window for every function (SPES-style knob)."""
+
+    def __init__(self, ttl_s: float):
+        self.ttl_s = ttl_s
+
+    def ttl_for(self, spec: FunctionSpec) -> float:
+        return self.ttl_s
+
+
+class NoKeepAlive(KeepAlivePolicy):
+    """Aggressive reclamation: every invocation is a cold start."""
+
+    def ttl_for(self, spec: FunctionSpec) -> float:
+        return 0.0
+
+
+# ---------------------------------------------------------------- scheduler
+class NodeScheduler:
+    """Concurrent serving runtime for one node."""
+
+    def __init__(
+        self,
+        registry: Optional[FunctionRegistry] = None,
+        node_cache: Optional[NodeImageCache] = None,
+        pool: Optional[BufferPool] = None,
+        iosched: Optional[PrefetchIOScheduler] = None,
+        max_workers: int = 8,
+        memory_budget_bytes: Optional[int] = None,
+        keepalive: Optional[KeepAlivePolicy] = None,
+    ):
+        self.registry = registry or FunctionRegistry()
+        self.node_cache = node_cache or NodeImageCache()
+        self.pool = pool or BufferPool()
+        self.iosched = iosched or PrefetchIOScheduler(name="node-iosched")
+        self.keepalive = keepalive or KeepAlivePolicy()
+        # warm-instance memory competes with pool staging buffers for the
+        # same host RAM: one budget covers both
+        self.memory_budget = (
+            memory_budget_bytes if memory_budget_bytes is not None else self.pool.capacity
+        )
+        self._instances: Dict[str, FunctionInstance] = {}
+        self._ilock = threading.Lock()
+        self._slock = threading.Lock()
+        self._exec = ThreadPoolExecutor(
+            max_workers=max_workers, thread_name_prefix="invoke"
+        )
+        self.stats = {
+            "invocations": 0,
+            "warm_hits": 0,
+            "cold_starts": 0,
+            "joined_restores": 0,
+            "ttl_evictions": 0,
+            "lru_evictions": 0,
+        }
+
+    def _bump(self, key: str, n: int = 1) -> None:
+        with self._slock:
+            self.stats[key] += n
+
+    # -------------------------------------------------------------- publish
+    def publish(
+        self,
+        name: str,
+        cfg: ModelConfig,
+        params,
+        dirpath: str,
+        base_name: Optional[str] = None,
+        warm_ttl_s: float = 0.0,
+        formats: Tuple[str, ...] = ("jif", "criu", "monolith"),
+        extra_state: Optional[Any] = None,
+    ) -> FunctionSpec:
+        """Offline JIF preparation: layerwise layout, pre-warm + trace,
+        access-order relocation, dedup vs base; also writes the baselines'
+        formats for comparison."""
+        import os
+
+        os.makedirs(dirpath, exist_ok=True)
+        state = layerwise_state(cfg, params)
+
+        # pre-warm trace: run one tiny invocation under the recorder; the
+        # recorder's lazy leaves record first touch when jit coerces them
+        def run(view):
+            generate(cfg, None, view, np.zeros((1, 4), np.int32), 2)
+
+        order = trace_access_order(state, run, max_iters=2)
+        jif_path = f"{dirpath}/{name}.jif"
+        base = self.node_cache.get(base_name)
+        if "jif" in formats:
+            snapshot(
+                state,
+                jif_path,
+                base=base,
+                access_order=order,
+                meta={"arch": cfg.name, "function": name},
+            )
+        if "criu" in formats:
+            baselines.criu_star_snapshot(state, f"{dirpath}/{name}.criu")
+        if "monolith" in formats:
+            baselines.monolith_snapshot(
+                state, f"{dirpath}/{name}.mono", extra_state=extra_state
+            )
+        spec = FunctionSpec(
+            name=name, arch=cfg.name, jif_path=jif_path, base_image=base_name,
+            warm_ttl_s=warm_ttl_s,
+        )
+        self.registry.register(spec)
+        return spec
+
+    # --------------------------------------------------------------- invoke
+    def submit(
+        self,
+        fname: str,
+        prompt: np.ndarray,
+        max_new_tokens: int = 8,
+        mode: str = "spice",
+        cfg: Optional[ModelConfig] = None,
+        simulate_read_bw: Optional[float] = None,
+    ) -> "Future[InvokeResult]":
+        """Admit an invocation into the node's worker pool."""
+        t_submit = time.perf_counter()
+        return self._exec.submit(
+            self._invoke, fname, prompt, max_new_tokens, mode, cfg,
+            simulate_read_bw, t_submit,
+        )
+
+    def invoke(
+        self,
+        fname: str,
+        prompt: np.ndarray,
+        max_new_tokens: int = 8,
+        mode: str = "spice",
+        cfg: Optional[ModelConfig] = None,
+        simulate_read_bw: Optional[float] = None,
+    ) -> InvokeResult:
+        return self.submit(
+            fname, prompt, max_new_tokens, mode, cfg, simulate_read_bw
+        ).result()
+
+    # ------------------------------------------------------------- eviction
+    def evict(self, fname: Optional[str] = None) -> None:
+        """Force-evict warm instances (all, or one) — manual reclamation."""
+        with self._ilock:
+            insts = (
+                list(self._instances.values())
+                if fname is None
+                else [i for n, i in self._instances.items() if n == fname]
+            )
+        for inst in insts:
+            with inst.cond:
+                inst.evict("manual")
+
+    def reap_expired(self, now: Optional[float] = None) -> int:
+        """Enforce keep-alive TTLs across the node; returns evictions."""
+        now = time.time() if now is None else now
+        n = 0
+        with self._ilock:
+            insts = list(self._instances.values())
+        for inst in insts:
+            with inst.cond:
+                if inst.expired(now) and inst.evict("ttl"):
+                    n += 1
+        if n:
+            self._bump("ttl_evictions", n)
+        return n
+
+    def warm_bytes(self) -> int:
+        with self._ilock:
+            insts = list(self._instances.values())
+        return sum(
+            i.memory_bytes for i in insts if i.state is InstanceState.WARM
+        )
+
+    def instance(self, fname: str) -> Optional[FunctionInstance]:
+        with self._ilock:
+            return self._instances.get(fname)
+
+    # ------------------------------------------------------------ internals
+    def _get_instance(self, fname: str, spec, cfg) -> FunctionInstance:
+        with self._ilock:
+            inst = self._instances.get(fname)
+            if inst is None:
+                inst = self._instances[fname] = FunctionInstance(spec, cfg)
+            return inst
+
+    def _invoke(
+        self, fname, prompt, max_new_tokens, mode, cfg, simulate_read_bw, t_submit
+    ) -> InvokeResult:
+        from repro.configs import get_config
+
+        spec = self.registry.get(fname)
+        cfg = cfg or get_config(spec.arch)
+        t0 = time.perf_counter()
+        queue_s = t0 - t_submit
+        self._bump("invocations")
+        inst = self._get_instance(fname, spec, cfg)
+        role = None
+        tree = getter = None
+        with inst.cond:
+            while role is None:
+                now = time.time()
+                if inst.expired(now) and inst.evict("ttl"):
+                    self._bump("ttl_evictions")
+                if inst.state is InstanceState.WARM:
+                    role = "warm"
+                    inst.counters["warm_hits"] += 1
+                    inst.last_used = now
+                    tree, getter = inst.tree, None
+                    inst.inflight += 1
+                elif inst.state is InstanceState.RESTORING:
+                    if inst.tree is not None:
+                        role = "joined"
+                        inst.counters["joined"] += 1
+                        tree, getter = inst.tree, inst.getter
+                        inst.inflight += 1
+                    else:  # owner claimed but handles not published yet
+                        inst.cond.wait(timeout=0.05)
+                else:  # COLD / EVICTED — this thread owns the restore
+                    role = "owner"
+                    inst.begin_restore(mode)
+                    inst.inflight += 1
+
+        try:
+            if role == "warm":
+                toks, ttft = generate(cfg, None, tree, prompt, max_new_tokens)
+                dt = time.perf_counter() - t0
+                self._bump("warm_hits")
+                return InvokeResult(
+                    toks, cold=False, mode="warm", ttft_s=ttft, total_s=dt,
+                    function=fname, queue_s=queue_s,
+                )
+            if role == "joined":
+                toks, ttft = generate(cfg, getter, tree, prompt, max_new_tokens)
+                dt = time.perf_counter() - t0
+                self._bump("joined_restores")
+                return InvokeResult(
+                    toks, cold=True, mode=mode, ttft_s=ttft, total_s=dt,
+                    function=fname, queue_s=queue_s, joined=True,
+                )
+
+            # ------------------------------------------------- owner (cold)
+            # any failure before promotion (restore, generation, resolve)
+            # must not strand the instance in RESTORING: abort releases
+            # joiners and makes the next invocation restore afresh
+            try:
+                state, stats, getter = self._cold_restore(
+                    spec, mode, simulate_read_bw
+                )
+                with inst.cond:
+                    inst.publish_restore(state, getter, stats)
+                restore_wait = time.perf_counter() - t0  # sync restore part
+                toks, ttft = generate(cfg, getter, state, prompt, max_new_tokens)
+                if isinstance(stats, RestoreStats):
+                    # snapshot-consistent stats: wait for the stream to
+                    # finish (it also closes the JIF reader) before reporting
+                    stats.wait_complete(timeout=300)
+                total = time.perf_counter() - t0
+
+                ttl = self.keepalive.ttl_for(spec)
+                now = time.time()
+                with inst.cond:
+                    resolved = getter(state) if (getter and ttl > 0) else state
+                    inst.promote_warm(resolved, ttl, now)
+            except BaseException:
+                with inst.cond:
+                    inst.abort_restore()
+                raise
+            self._bump("cold_starts")
+            if ttl > 0:
+                self._enforce_budget(keep=fname)
+            return InvokeResult(
+                toks, cold=True, mode=mode,
+                restore_wait_s=restore_wait,
+                ttft_s=restore_wait + ttft,  # time-to-first-token from request
+                total_s=total,
+                stats=stats.as_dict() if stats else None,
+                function=fname, queue_s=queue_s,
+            )
+        finally:
+            with inst.cond:
+                inst.inflight -= 1
+                inst.cond.notify_all()
+
+    def _enforce_budget(self, keep: Optional[str] = None) -> None:
+        """LRU-evict idle warm instances until warm state + pool staging
+        memory fit the node budget."""
+        if self.memory_budget is None:
+            return
+        self.reap_expired()  # free expired TTLs before sacrificing LRU state
+        with self._ilock:
+            insts = list(self._instances.values())
+        warm = [
+            i for i in insts
+            if i.state is InstanceState.WARM and i.idle and i.spec.name != keep
+        ]
+        for victim in self.keepalive.victims(warm, need_evict=len(warm)):
+            usage = self.warm_bytes() + self.pool.held_bytes
+            if usage <= self.memory_budget:
+                return
+            with victim.cond:
+                if victim.evict("lru"):
+                    self._bump("lru_evictions")
+
+    def _cold_restore(self, spec: FunctionSpec, mode: str, sim_bw=None):
+        # eager install: numpy -> device array on the prefetcher thread (the
+        # PTE-install analogue), so execution never pays conversion copies.
+        # MUST copy: on CPU jnp.asarray can alias the staging buffer, which
+        # the restorer recycles into the zero pool (on TPU device_put always
+        # copies into HBM).
+        install = lambda a: jnp.array(a, copy=True)
+        if mode == "spice":
+            restorer = SpiceRestorer(
+                pool=self.pool, node_cache=self.node_cache,
+                transform=install, simulate_read_bw=sim_bw,
+                iosched=self.iosched,
+            )
+            state, meta, handles, stats = restorer.restore(spec.jif_path, wait=False)
+            return state, stats, wait_tree
+        if mode == "spice_sync":
+            restorer = SpiceRestorer(
+                pool=self.pool, node_cache=self.node_cache, pipelined=False,
+                transform=install, simulate_read_bw=sim_bw,
+                iosched=self.iosched,
+            )
+            state, meta, handles, stats = restorer.restore(spec.jif_path, wait=True)
+            return state, stats, None
+        if mode == "criu_star":
+            state, stats = baselines.criu_star_restore(
+                spec.jif_path.replace(".jif", ".criu"), simulate_read_bw=sim_bw
+            )
+            return jax.tree.map(install, state), stats, None
+        if mode == "reap_star":
+            state, stats = baselines.reap_star_restore(
+                spec.jif_path.replace(".jif", ".mono"), simulate_read_bw=sim_bw
+            )
+            return jax.tree.map(install, state), stats, None
+        if mode == "faasnap_star":
+            r = baselines.FaasnapAsyncRestorer(
+                spec.jif_path.replace(".jif", ".mono"), simulate_read_bw=sim_bw
+            )
+            # rebuild a handle-like tree backed by ensure()
+            leaves = {
+                t["name"]: _FaasnapLeaf(r, t["name"])
+                for t in r.r.header["tensors"]
+                if not t["name"].startswith("__extra__/")
+            }
+            state = unflatten_state(r.r.header["tree"], leaves)
+            return state, r.stats, faasnap_wait
+        raise ValueError(f"unknown restore mode {mode!r}")

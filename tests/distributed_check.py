@@ -23,8 +23,9 @@ from repro.train.steps import TrainStepConfig, init_train_state, make_train_step
 
 
 def mesh_2d():
-    return jax.make_mesh((2, 4), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    from repro.launch.mesh import make_mesh_compat
+
+    return make_mesh_compat((2, 4), ("data", "model"))
 
 
 def check_moe_and_embed():

@@ -1,0 +1,168 @@
+"""Multi-tenant node runtime: concurrent restores through the shared
+prefetch I/O scheduler, instance lifecycle (TTL + LRU eviction), and
+joined in-flight restores."""
+import time
+
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config
+from repro.models import lm
+from repro.serve.engine import ServerlessNode
+from repro.serve.instance import InstanceState
+from repro.serve.node import FixedTTLPolicy, NodeScheduler
+
+ARCH = "qwen1.5-0.5b"
+PROMPT = np.array([[3, 1, 4, 1, 5, 9]], dtype=np.int32)
+FNAMES = ["fn-a", "fn-b", "fn-c", "fn-d"]
+
+
+@pytest.fixture(scope="module")
+def node_with_zoo(tmp_path_factory):
+    """Four functions of one arch (distinct weights) on one node."""
+    d = tmp_path_factory.mktemp("zoo")
+    cfg = get_config(ARCH).reduced()
+    node = ServerlessNode()
+    for i, fname in enumerate(FNAMES):
+        params = lm.init_params(cfg, jax.random.PRNGKey(i), jnp.float32)
+        node.publish(fname, cfg, params, str(d), warm_ttl_s=0.0,
+                     formats=("jif", "monolith"))
+    # compile-cache warmup (shared across functions of one arch)
+    node.invoke(FNAMES[0], PROMPT, max_new_tokens=3, mode="spice_sync", cfg=cfg)
+    return node, cfg
+
+
+def test_concurrent_cold_invokes_match_warm_reference(node_with_zoo):
+    node, cfg = node_with_zoo
+    # warm reference tokens, one function at a time
+    ref = {}
+    for fname in FNAMES:
+        node.evict()
+        r = node.invoke(fname, PROMPT, max_new_tokens=4, mode="spice_sync", cfg=cfg)
+        ref[fname] = r.tokens
+    node.evict()
+
+    before = node.iosched.snapshot_stats()
+    futures = [
+        node.submit(fname, PROMPT, max_new_tokens=4, mode="spice", cfg=cfg)
+        for fname in FNAMES
+    ]
+    results = {f.result().function: f.result() for f in futures}
+    after = node.iosched.snapshot_stats()
+
+    assert set(results) == set(FNAMES)
+    for fname in FNAMES:
+        assert results[fname].cold
+        np.testing.assert_array_equal(results[fname].tokens, ref[fname],
+                                      err_msg=fname)
+    # every restore went through the SHARED scheduler
+    assert after["streams_opened"] - before["streams_opened"] >= len(FNAMES)
+    assert after["bytes_read"] > before["bytes_read"]
+
+
+def test_concurrent_same_function_joins_inflight_restore(node_with_zoo):
+    node, cfg = node_with_zoo
+    node.evict()
+    futures = [
+        node.submit(FNAMES[0], PROMPT, max_new_tokens=3, mode="spice", cfg=cfg)
+        for _ in range(4)
+    ]
+    results = [f.result() for f in futures]
+    toks = results[0].tokens
+    for r in results[1:]:
+        np.testing.assert_array_equal(r.tokens, toks)
+    assert all(r.cold for r in results)
+    # exactly one owner restored; the rest joined its handle tree
+    assert sum(1 for r in results if r.joined) == len(results) - 1
+
+
+def test_contended_restores_issue_demand_boosts(node_with_zoo):
+    """With several functions restoring through one arbiter at simulated
+    NVMe bandwidth, execution demand must overtake background prefetch."""
+    node, cfg = node_with_zoo
+    node.evict()
+    before = node.iosched.snapshot_stats()["demand_boosts"]
+    futures = [
+        node.submit(fname, PROMPT, max_new_tokens=3, mode="spice", cfg=cfg,
+                    simulate_read_bw=1e9)
+        for fname in FNAMES[:3]
+    ]
+    for f in futures:
+        assert f.result().cold
+    assert node.iosched.snapshot_stats()["demand_boosts"] > before
+
+
+def test_warm_ttl_expiry_takes_cold_path(tmp_path):
+    """Regression: warm instances past their TTL must be evicted and the
+    next invocation must take the cold path (the seed stored the expiry
+    but never checked it)."""
+    cfg = get_config(ARCH).reduced()
+    params = lm.init_params(cfg, jax.random.PRNGKey(9), jnp.float32)
+    node = ServerlessNode()
+    node.publish("ttl-fn", cfg, params, str(tmp_path), warm_ttl_s=0.4,
+                 formats=("jif",))
+    r1 = node.invoke("ttl-fn", PROMPT, max_new_tokens=3, mode="spice", cfg=cfg)
+    r2 = node.invoke("ttl-fn", PROMPT, max_new_tokens=3, mode="spice", cfg=cfg)
+    assert r1.cold and not r2.cold  # within TTL: warm
+    inst = node.scheduler.instance("ttl-fn")
+    assert inst.state is InstanceState.WARM
+    time.sleep(0.5)
+    r3 = node.invoke("ttl-fn", PROMPT, max_new_tokens=3, mode="spice", cfg=cfg)
+    assert r3.cold  # expired: evicted, cold path again
+    assert node.scheduler.stats["ttl_evictions"] >= 1
+    assert inst.counters["ttl_evictions"] >= 1
+    np.testing.assert_array_equal(r1.tokens, r3.tokens)
+
+
+def test_lru_eviction_under_memory_budget(tmp_path):
+    """A tight node budget keeps only the most recently used instances
+    warm; older ones are LRU-evicted."""
+    cfg = get_config(ARCH).reduced()
+    node = ServerlessNode(
+        pool=None,
+        keepalive=FixedTTLPolicy(3600.0),  # everyone WANTS to stay warm
+    )
+    for i, fname in enumerate(["lru-a", "lru-b", "lru-c"]):
+        params = lm.init_params(cfg, jax.random.PRNGKey(20 + i), jnp.float32)
+        node.publish(fname, cfg, params, str(tmp_path), formats=("jif",))
+
+    r = node.invoke("lru-a", PROMPT, max_new_tokens=2, mode="spice", cfg=cfg)
+    assert r.cold
+    inst_a = node.scheduler.instance("lru-a")
+    assert inst_a.state is InstanceState.WARM and inst_a.memory_bytes > 0
+    # budget: room for ~1.5 instances on top of pool staging memory
+    node.scheduler.memory_budget = (
+        node.pool.held_bytes + int(1.5 * inst_a.memory_bytes)
+    )
+    node.invoke("lru-b", PROMPT, max_new_tokens=2, mode="spice", cfg=cfg)
+    assert node.scheduler.instance("lru-a").state is InstanceState.EVICTED
+    assert node.scheduler.instance("lru-b").state is InstanceState.WARM
+    node.invoke("lru-c", PROMPT, max_new_tokens=2, mode="spice", cfg=cfg)
+    assert node.scheduler.instance("lru-b").state is InstanceState.EVICTED
+    assert node.scheduler.instance("lru-c").state is InstanceState.WARM
+    assert node.scheduler.stats["lru_evictions"] >= 2
+
+
+def test_instance_state_machine_transitions():
+    from repro.core import FunctionSpec
+    from repro.serve.instance import FunctionInstance
+
+    spec = FunctionSpec(name="f", arch=ARCH, jif_path="/dev/null")
+    inst = FunctionInstance(spec, cfg=None)
+    assert inst.state is InstanceState.COLD
+    with inst.cond:
+        gen = inst.begin_restore("spice")
+        assert inst.state is InstanceState.RESTORING and gen == 1
+        inst.publish_restore({"x": 1}, None, None)
+        inst.promote_warm({"x": np.zeros(64)}, ttl_s=10.0, now=time.time())
+        assert inst.state is InstanceState.WARM
+        assert inst.memory_bytes == 64 * 8
+        assert inst.evict("manual")
+        assert inst.state is InstanceState.EVICTED
+        # next restore bumps the generation
+        assert inst.begin_restore("spice") == 2
+        inst.publish_restore({"x": 1}, None, None)
+        inst.promote_warm({"x": 1}, ttl_s=0.0, now=time.time())  # no keep-alive
+        assert inst.state is InstanceState.COLD and inst.tree is None
