@@ -25,6 +25,17 @@ from repro.serve.engine import ServerlessNode, layerwise_state
 BENCH_DIR = Path(__file__).resolve().parents[1] / "results" / "bench_fns"
 
 
+def _jif_version(path: Path) -> int:
+    """Peek a cached image's format version (0 if unreadable)."""
+    try:
+        from repro.core.jif import JifReader
+
+        with JifReader(str(path)) as r:
+            return r.version
+    except Exception:
+        return 0
+
+
 def bench_config(arch: str, d_model=512, reps=8, vocab=8192):
     """Mid-size config of the arch's family (~30-80 MB of weights)."""
     cfg = get_config(arch).reduced()
@@ -85,7 +96,9 @@ def build_zoo(force: bool = False) -> ServerlessNode:
                 return a
             params["pattern"][pi] = jax.tree.map(bump, params["pattern"][pi])
         jif = BENCH_DIR / f"{fname}.jif"
-        if force or not jif.exists():
+        # v1 images predate the ws boundary: republish so the working-set
+        # promotion path (and residual extra state) is exercised
+        if force or not jif.exists() or _jif_version(jif) < 2:
             # fake optimizer/scratch state the VM-style snapshots also capture
             extra = {"opt": np.ones((4 << 20,), np.float32),
                      "scratch": np.zeros((2 << 20,), np.float32)}

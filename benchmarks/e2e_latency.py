@@ -1,48 +1,175 @@
 """Fig 1/9: end-to-end cold-start invocation latency per restore system,
-vs a warm invocation, across the function zoo."""
+vs a warm invocation, across the function zoo.
+
+Also measures the two headline properties of the snapshot lifecycle
+subsystem (tracked in ``BENCH_coldstart.json`` at the repo root):
+
+* **WARM-at-working-set TTFT** — pipelined spice with working-set promotion
+  vs the full-restore-wait (``spice_sync``) TTFT of the same image;
+* **delta-chain economics** — a fine-tuned state (<30% of pages dirty)
+  snapshotted against its parent JIF writes a fraction of the full private
+  bytes and restores byte-identically through the chain.
+"""
 from __future__ import annotations
+
+import dataclasses
+import os
+import tempfile
+
+import numpy as np
 
 from benchmarks.common import PROMPT, build_zoo, fn_config
 
 MODES = ["spice", "criu_star", "reap_star", "faasnap_star"]
 
+# per-mode TTFT / working-set time / total restore time, filled by run()
+# and dumped to BENCH_coldstart.json by benchmarks/run.py
+SUMMARY: dict = {}
+
+
+def _smoke() -> bool:
+    return os.environ.get("BENCH_SMOKE", "") not in ("", "0")
+
+
+def _coldstart_rows(node, fnames, rows):
+    """spice TTFT with working-set promotion vs full-restore-wait TTFT."""
+    for fname in fnames:
+        cfg = fn_config(fname)
+        per_mode = SUMMARY.setdefault("functions", {}).setdefault(fname, {})
+        spec = node.registry.get(fname)
+        old_ttl = spec.warm_ttl_s
+        spec.warm_ttl_s = 60.0  # keep-alive so WARM-at-working-set fires
+        try:
+            for mode, tag in [("spice", "ws_promotion"), ("spice_sync", "full_wait")]:
+                best_ttft = best_total = float("inf")
+                ws_s = 0.0
+                reps = 1 if _smoke() else 3
+                for _ in range(reps):
+                    node.scheduler.drain_residual()
+                    node.evict()
+                    # mid-tier NVMe bandwidth: I/O dominates, so the promotion
+                    # point (working set vs full image) is what separates modes
+                    r = node.invoke(fname, PROMPT, max_new_tokens=4, mode=mode,
+                                    cfg=cfg, simulate_read_bw=2e8)
+                    assert r.cold, f"{fname}/{mode}: expected a cold start"
+                    if r.ttft_s < best_ttft:
+                        best_ttft = r.ttft_s
+                        # keep the record internally consistent: ws time
+                        # from the same repetition as the reported TTFT
+                        if r.stats:
+                            ws_s = (r.stats.get("working_set_s", 0.0)
+                                    or r.stats.get("total_s", 0.0))
+                    best_total = min(best_total, r.total_s)
+                per_mode[tag] = {
+                    "ttft_s": best_ttft,
+                    "working_set_s": ws_s,
+                    "total_restore_s": best_total,
+                }
+                rows.append((f"coldstart/{fname}/{tag}_ttft", best_ttft * 1e6, ""))
+        finally:
+            node.scheduler.drain_residual()
+            spec.warm_ttl_s = old_ttl
+            node.evict()
+        ws = per_mode["ws_promotion"]["ttft_s"]
+        full = per_mode["full_wait"]["ttft_s"]
+        rows.append(
+            (f"coldstart/{fname}/ws_vs_full_wait", ws / full, "x (must be <1)")
+        )
+
+
+def _delta_rows(rows):
+    """Fine-tune delta snapshots: private bytes vs the full image, restored
+    byte-identically through the parent chain from a cold cache."""
+    import jax
+
+    from repro.configs import get_config
+    from repro.core import NodeImageCache, SpiceRestorer, snapshot
+    from repro.core.treeutil import flatten_state
+    from repro.models import lm
+    from repro.serve.engine import layerwise_state
+
+    cfg = get_config("qwen1.5-0.5b").reduced()
+    cfg = dataclasses.replace(
+        cfg, pattern_reps=10, n_layers=10, d_model=256, d_ff=512, head_dim=32
+    )
+    base = layerwise_state(cfg, lm.init_params(cfg, jax.random.PRNGKey(0)))
+
+    with tempfile.TemporaryDirectory() as d:
+        parent_path = f"{d}/base.jif"
+        full = snapshot(base, parent_path)
+
+        # fine-tune ~25% of the stack: <30% of pages dirty
+        ft = jax.tree.map(np.asarray, base)
+        cut = int(len(ft["layers"]) * 0.75)
+        for li in range(cut, len(ft["layers"])):
+            ft["layers"][li] = jax.tree.map(lambda a: a * 1.02, ft["layers"][li])
+
+        delta_path = f"{d}/ft.jif"
+        ds = snapshot(ft, delta_path, parent=parent_path)
+        ratio = ds.private_bytes / max(full.private_bytes, 1)
+
+        got, _, _, rstats = SpiceRestorer(node_cache=NodeImageCache()).restore(delta_path)
+        identical = all(
+            np.array_equal(np.asarray(x), np.asarray(y))
+            for (_, x), (_, y) in zip(flatten_state(ft)[0], flatten_state(got)[0])
+        )
+        rows.append(("delta/private_vs_full", ratio, "frac (must be <0.4)"))
+        rows.append(("delta/full_private_mb", full.private_bytes / 1e6, ""))
+        rows.append(("delta/delta_private_mb", ds.private_bytes / 1e6, ""))
+        rows.append(("delta/restore_identical", 1.0 if identical else 0.0, "bool"))
+        rows.append(("delta/restore_ms", rstats.total_s * 1e3, ""))
+        SUMMARY["delta"] = {
+            "private_vs_full": ratio,
+            "full_private_bytes": full.private_bytes,
+            "delta_private_bytes": ds.private_bytes,
+            "restore_identical": identical,
+        }
+
 
 def run() -> list:
     node = build_zoo()
-    rows = []
-    for fname in node.registry.names():
+    rows: list = []
+    fnames = node.registry.names()[:1] if _smoke() else node.registry.names()
+
+    for fname in fnames:
         cfg = fn_config(fname)
         # compile-cache warmup (the restored "JIT state"): one throwaway run
         node.invoke(fname, PROMPT, max_new_tokens=4, mode="spice_sync", cfg=cfg)
-        for mode in MODES:
-            for bw, tag in [(None, ""), (2e9, "_simnvme")]:
-                node.evict()
-                best = float("inf")
-                for _ in range(3):
+        if not _smoke():
+            for mode in MODES:
+                for bw, tag in [(None, ""), (2e9, "_simnvme")]:
                     node.evict()
-                    r = node.invoke(fname, PROMPT, max_new_tokens=4, mode=mode,
-                                    cfg=cfg, simulate_read_bw=bw)
-                    best = min(best, r.total_s)
-                rows.append((f"e2e_cold{tag}/{fname}/{mode}", best * 1e6, ""))
-        # warm comparison
-        node.evict()
-        node.registry.get(fname).warm_ttl_s = 60
-        node.invoke(fname, PROMPT, max_new_tokens=4, mode="spice", cfg=cfg)
-        r = node.invoke(fname, PROMPT, max_new_tokens=4, cfg=cfg)
-        rows.append((f"e2e_warm/{fname}/warm", r.total_s * 1e6, ""))
-        node.registry.get(fname).warm_ttl_s = 0
-        node.evict()
-    # derived: spice slowdown vs warm, speedup vs baselines
-    d = {n: v for n, v, _ in rows}
-    for fname in node.registry.names():
-        warm = d[f"e2e_warm/{fname}/warm"]
-        for tag in ["", "_simnvme"]:
-            spice = d[f"e2e_cold{tag}/{fname}/spice"]
-            criu = d[f"e2e_cold{tag}/{fname}/criu_star"]
-            reap = d[f"e2e_cold{tag}/{fname}/reap_star"]
-            faas = d[f"e2e_cold{tag}/{fname}/faasnap_star"]
-            rows.append((f"e2e_ratio{tag}/{fname}/spice_vs_warm", spice / warm, "x"))
-            rows.append((f"e2e_ratio{tag}/{fname}/criu_vs_spice", criu / spice, "x"))
-            rows.append((f"e2e_ratio{tag}/{fname}/reap_vs_spice", reap / spice, "x"))
-            rows.append((f"e2e_ratio{tag}/{fname}/faasnap_vs_spice", faas / spice, "x"))
+                    best = float("inf")
+                    for _ in range(3):
+                        node.evict()
+                        r = node.invoke(fname, PROMPT, max_new_tokens=4, mode=mode,
+                                        cfg=cfg, simulate_read_bw=bw)
+                        best = min(best, r.total_s)
+                    rows.append((f"e2e_cold{tag}/{fname}/{mode}", best * 1e6, ""))
+            # warm comparison
+            node.evict()
+            node.registry.get(fname).warm_ttl_s = 60
+            node.invoke(fname, PROMPT, max_new_tokens=4, mode="spice", cfg=cfg)
+            r = node.invoke(fname, PROMPT, max_new_tokens=4, cfg=cfg)
+            rows.append((f"e2e_warm/{fname}/warm", r.total_s * 1e6, ""))
+            node.registry.get(fname).warm_ttl_s = 0
+            node.evict()
+
+    _coldstart_rows(node, fnames, rows)
+    _delta_rows(rows)
+
+    if not _smoke():
+        # derived: spice slowdown vs warm, speedup vs baselines
+        d = {n: v for n, v, _ in rows}
+        for fname in fnames:
+            warm = d[f"e2e_warm/{fname}/warm"]
+            for tag in ["", "_simnvme"]:
+                spice = d[f"e2e_cold{tag}/{fname}/spice"]
+                criu = d[f"e2e_cold{tag}/{fname}/criu_star"]
+                reap = d[f"e2e_cold{tag}/{fname}/reap_star"]
+                faas = d[f"e2e_cold{tag}/{fname}/faasnap_star"]
+                rows.append((f"e2e_ratio{tag}/{fname}/spice_vs_warm", spice / warm, "x"))
+                rows.append((f"e2e_ratio{tag}/{fname}/criu_vs_spice", criu / spice, "x"))
+                rows.append((f"e2e_ratio{tag}/{fname}/reap_vs_spice", reap / spice, "x"))
+                rows.append((f"e2e_ratio{tag}/{fname}/faasnap_vs_spice", faas / spice, "x"))
     return rows

@@ -8,11 +8,20 @@ Prints ``name,us_per_call,derived`` CSV. Module map:
   ablation          -> Fig 11          (restore optimizations, incremental)
   concurrency       -> Fig 12 (+Fig 3 interference) (burst max latency)
   roofline          -> EXPERIMENTS.md §Roofline (from dry-run artifacts)
+
+``e2e_latency`` additionally drops ``BENCH_coldstart.json`` at the repo
+root (per-mode TTFT / working-set time / total restore time, plus the
+delta-chain economics) so CI can track the cold-start trajectory.  Set
+``BENCH_SMOKE=1`` for the CI-sized run (one function, one repetition).
 """
 import argparse
+import json
 import sys
 import time
 import traceback
+from pathlib import Path
+
+REPO_ROOT = Path(__file__).resolve().parents[1]
 
 MODULES = [
     "e2e_latency",
@@ -40,6 +49,11 @@ def main() -> None:
             for row in mod.run():
                 n, us, derived = row
                 print(f"{n},{us:.1f},{derived}")
+            summary = getattr(mod, "SUMMARY", None)
+            if summary:
+                out = REPO_ROOT / f"BENCH_{name.replace('e2e_latency', 'coldstart')}.json"
+                out.write_text(json.dumps(summary, indent=2, sort_keys=True))
+                print(f"# wrote {out}", flush=True)
         except Exception as e:
             failures += 1
             print(f"{name},nan,ERROR:{type(e).__name__}:{e}", flush=True)

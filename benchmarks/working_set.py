@@ -33,5 +33,19 @@ def run() -> list:
                 f"ws_mb={total * r.page_size / 1e6:.1f}",
             )
         )
+        # JIF v2 working-set boundary: the fraction of the data segment a
+        # cold start must read before the instance promotes WARM; the rest
+        # streams as residual at background priority
+        n_chunks = max(r.n_data_chunks, 1)
+        ws_tensors = len(r.meta.get("working_set", []))
+        rows.append(
+            (
+                f"working_set/{fname}/ws_boundary_pct",
+                100.0 * r.ws_boundary / n_chunks,
+                f"jif_v{r.version},ws_chunks={r.ws_boundary},"
+                f"data_chunks={n_chunks},ws_tensors={ws_tensors},"
+                f"residual_tensors={len(r.tensors) - ws_tensors}",
+            )
+        )
         r.close()
     return rows

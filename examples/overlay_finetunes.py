@@ -1,6 +1,9 @@
-"""Overlay economics: N fine-tunes of one base model, snapshotted with
-overlay dedup — storage & restore I/O scale with the *delta*, not the model,
-and the node base-image cache serves the shared bytes from RAM.
+"""Overlay economics: N fine-tunes of one base model, snapshotted as
+**delta chains against the parent JIF on disk** — storage & restore I/O
+scale with the *delta*, not the model.  Restores run against a COLD node
+cache: the parent image is bootstrapped from its file on first use
+(``BaseImage.from_jif``) and then serves every sibling's shared bytes from
+RAM.
 
     PYTHONPATH=src python examples/overlay_finetunes.py
 """
@@ -11,7 +14,8 @@ import jax
 import numpy as np
 
 from repro.configs import get_config
-from repro.core import BaseImage, NodeImageCache, SpiceRestorer, snapshot
+from repro.core import NodeImageCache, SpiceRestorer, snapshot
+from repro.core.lifecycle import parent_cache_key
 from repro.models import lm
 from repro.serve.engine import layerwise_state
 
@@ -24,11 +28,16 @@ def main():
     base_params = lm.init_params(cfg, jax.random.PRNGKey(0))
     base_state = layerwise_state(cfg, base_params)
 
-    cache = NodeImageCache()
-    cache.put(BaseImage.from_state("base", base_state))
-
     with tempfile.TemporaryDirectory() as d:
-        print(f"{'finetune':>10} {'total_MB':>9} {'file_MB':>8} {'dedup':>6} {'restore_ms':>10}")
+        # the parent is just another JIF on disk — no pre-seeded node cache
+        parent = f"{d}/base.jif"
+        full = snapshot(base_state, parent)
+        print(f"base image: {full.total_bytes/1e6:.1f} MB total, "
+              f"{full.private_bytes/1e6:.1f} MB private\n")
+
+        cache = NodeImageCache()  # cold: bootstrapped from disk on first restore
+        print(f"{'finetune':>10} {'total_MB':>9} {'file_MB':>8} {'dedup':>6} "
+              f"{'vs_full':>8} {'restore_ms':>10}")
         for i, frac in enumerate([0.05, 0.2, 0.5]):
             # fine-tune the top `frac` of layers
             ft = jax.tree.map(np.asarray, base_state)
@@ -37,7 +46,7 @@ def main():
                 ft["layers"][li] = jax.tree.map(lambda a: a * 1.02, ft["layers"][li])
 
             path = f"{d}/ft{i}.jif"
-            stats = snapshot(ft, path, base=cache.get("base"))
+            stats = snapshot(ft, path, parent=parent)
 
             restorer = SpiceRestorer(node_cache=cache)
             got, _, _, rstats = restorer.restore(path)
@@ -47,9 +56,13 @@ def main():
             print(
                 f"{f'{int(frac*100)}%-tuned':>10} "
                 f"{stats.total_bytes/1e6:9.1f} {stats.private_bytes/1e6:8.1f} "
-                f"{(1-stats.file_fraction)*100:5.1f}% {rstats.total_s*1e3:10.2f}"
+                f"{(1-stats.file_fraction)*100:5.1f}% "
+                f"{100*stats.private_bytes/max(full.private_bytes,1):7.1f}% "
+                f"{rstats.total_s*1e3:10.2f}"
             )
-        print("\nbase-image cache:", cache.stats)
+        assert cache.get(parent_cache_key(parent)) is not None
+        print("\nbase-image cache:", cache.stats,
+              f"resident={cache.total_bytes/1e6:.1f}MB")
 
 
 if __name__ == "__main__":

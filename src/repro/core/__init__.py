@@ -10,12 +10,14 @@ from repro.core.overlay import (
     IntervalTable,
 )
 from repro.core.iosched import IOStream, PrefetchIOScheduler
+from repro.core.lifecycle import SnapshotPipeline
 from repro.core.pool import BufferPool
 from repro.core.restore import RestoreStats, SpiceRestorer, TensorHandle
 from repro.core.snapshot import SnapshotStats, snapshot
 from repro.core.registry import FunctionRegistry, FunctionSpec
 
 __all__ = [
+    "SnapshotPipeline",
     "BaseImage",
     "NodeImageCache",
     "BufferPool",

@@ -5,6 +5,12 @@ model, language runtime weights, ...). They stay resident in node RAM after
 container teardown, so subsequent restores of any function that deduplicated
 against them fetch only private chunks from storage — the paper's
 "specialized node pools / Python+AI pools" operating model builds on this.
+
+Images can be bootstrapped straight from JIFs on disk
+(:meth:`BaseImage.from_jif`): a delta-chain restore that misses its parent in
+the cache materializes the parent image from its file (recursively through
+the chain) and installs it, so a freshly provisioned node needs nothing but
+the snapshot store.
 """
 from __future__ import annotations
 
@@ -37,6 +43,38 @@ class BaseImage:
             img._digests[lname] = overlay.chunk_digests(memoryview(raw), page_size)
         return img
 
+    @classmethod
+    def from_jif(
+        cls,
+        path: str,
+        name: Optional[str] = None,
+        node_cache: Optional["NodeImageCache"] = None,
+        iosched=None,
+        simulate_read_bw: Optional[float] = None,
+    ) -> "BaseImage":
+        """Materialize a full image from a JIF on disk.  The restore runs
+        synchronously through ``node_cache``, which resolves (and, for delta
+        chains, recursively bootstraps) any parent the JIF references.
+        Pass the node's ``iosched`` so the bootstrap's reads are arbitrated
+        against live tenant streams instead of bypassing the scheduler."""
+        from repro.core.jif import JifReader
+        from repro.core.restore import SpiceRestorer
+
+        with JifReader(path) as r:
+            page_size = r.page_size
+        if name is None:
+            from repro.core.lifecycle import parent_cache_key
+
+            name = parent_cache_key(path)
+        # pipelined even though we wait: inline streams are drained on the
+        # caller's thread and would bypass the scheduler's arbitration
+        restorer = SpiceRestorer(
+            node_cache=node_cache,
+            iosched=iosched, simulate_read_bw=simulate_read_bw,
+        )
+        state, _, _, _ = restorer.restore(path)
+        return cls.from_state(name, state, page_size)
+
     def digests(self, name: str) -> Optional[np.ndarray]:
         return self._digests.get(name)
 
@@ -56,17 +94,24 @@ class NodeImageCache:
         self.capacity = capacity_bytes
         self._images: "OrderedDict[str, BaseImage]" = OrderedDict()
         self._lock = threading.Lock()
+        # resident bytes, maintained incrementally (the evict loop used to
+        # re-sum every image per iteration — O(n²) under churn)
+        self.total_bytes = 0
         self.stats = {"hits": 0, "misses": 0, "evictions": 0, "base_bytes_served": 0}
 
     def put(self, img: BaseImage) -> None:
         with self._lock:
+            old = self._images.get(img.name)
+            if old is not None:
+                self.total_bytes -= old.nbytes
             self._images[img.name] = img
+            self.total_bytes += img.nbytes
             self._images.move_to_end(img.name)
             self._evict()
 
     def get(self, name: Optional[str]) -> Optional[BaseImage]:
         if name is None:
-            return None
+            return None  # "no base" is not a cache miss
         with self._lock:
             img = self._images.get(name)
             if img is None:
@@ -82,6 +127,7 @@ class NodeImageCache:
             self.stats["base_bytes_served"] += nbytes
 
     def _evict(self):
-        while sum(i.nbytes for i in self._images.values()) > self.capacity and len(self._images) > 1:
-            self._images.popitem(last=False)
+        while self.total_bytes > self.capacity and len(self._images) > 1:
+            _, img = self._images.popitem(last=False)
+            self.total_bytes -= img.nbytes
             self.stats["evictions"] += 1

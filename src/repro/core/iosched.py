@@ -84,6 +84,14 @@ class IOStream:
         """Demand-promote one tensor's pending I/O (see module docstring)."""
         return self.sched._boost(self, tensor_name)
 
+    def set_priority(self, priority: int) -> None:
+        """Re-prioritize a live stream (e.g. demote the residual tail of a
+        restore to background once its working set has landed); pending
+        demand boosts are unaffected — they are checked before priority."""
+        with self.sched._cv:
+            self.priority = priority
+            self.sched._cv.notify_all()
+
     def abort(self, exc: BaseException) -> None:
         """Fail the stream: drop pending work, release waiters, complete."""
         self.sched._fail_stream(self, exc)

@@ -5,6 +5,7 @@ instance::
 
     magic "JIF1" | u32 header_len | msgpack header | pad(64)
     | per-tensor interval tables (raw little-endian int64, zero-deserialize)
+    | per-tensor chunk digests (raw (n,16) uint8 blake2b, v2 only)
     | pad(4096)
     | data segment: PRIVATE chunks, contiguous, in first-access order
 
@@ -13,6 +14,18 @@ shapes, logical sharding axes, access order, RNG/step/arch config) so the
 whole metadata restore is ONE decode — no per-resource replay.  The data
 segment layout enables restoring the working set with a single sequential
 high-throughput read.
+
+Version 2 additions (the v1 layout above is still read transparently):
+
+* ``ws_boundary`` — the data-segment chunk where the traced working set
+  ends: everything before it restores with one sequential read before
+  execution resumes; everything after is residual background prefetch.
+* ``parent`` — optional on-disk parent reference for delta snapshots: the
+  image only stores chunks that differ from the parent JIF, and restore
+  resolves BASE chunks through the parent chain (bootstrapping the node
+  cache from disk when needed).
+* per-tensor chunk digests — stored raw so a child snapshot can classify
+  against this image without materializing its data segment.
 """
 from __future__ import annotations
 
@@ -29,7 +42,9 @@ from repro.core.overlay import IntervalTable
 MAGIC = b"JIF1"
 ALIGN_TABLE = 64
 ALIGN_DATA = 4096
-VERSION = 1
+VERSION = 2
+
+_DIGEST_BYTES = 16
 
 
 @dataclasses.dataclass
@@ -40,6 +55,8 @@ class TensorEntry:
     nbytes: int
     itable_off: int = 0
     itable_rows: int = 0
+    digest_off: int = 0  # 0 = no stored digests (v1 images)
+    digest_rows: int = 0
 
     def to_header(self) -> Dict:
         return {
@@ -49,6 +66,8 @@ class TensorEntry:
             "nbytes": self.nbytes,
             "itable_off": self.itable_off,
             "itable_rows": self.itable_rows,
+            "digest_off": self.digest_off,
+            "digest_rows": self.digest_rows,
         }
 
     @classmethod
@@ -60,6 +79,8 @@ class TensorEntry:
             nbytes=d["nbytes"],
             itable_off=d["itable_off"],
             itable_rows=d["itable_rows"],
+            digest_off=d.get("digest_off", 0),
+            digest_rows=d.get("digest_rows", 0),
         )
 
 
@@ -78,6 +99,8 @@ def write_jif(
     data_chunks: Iterable[bytes],
     page_size: int,
     base_ref: Optional[Dict] = None,
+    digests: Optional[Dict[str, np.ndarray]] = None,
+    ws_boundary: Optional[int] = None,
 ) -> Dict[str, int]:
     """Write atomically (tmp + rename). Returns offsets/stats."""
     tmp = path + ".tmp"
@@ -88,7 +111,10 @@ def write_jif(
         for t in tensors:  # rows known up front; offsets patched after layout
             t.itable_rows = np.ascontiguousarray(itables[t.name], np.int64).reshape(-1, 4).shape[0]
             t.itable_off = BIG
-        draft = _encode_header(meta, tensors, page_size, base_ref, BIG, BIG)
+            if digests is not None and t.name in digests:
+                t.digest_rows = len(digests[t.name])
+                t.digest_off = BIG
+        draft = _encode_header(meta, tensors, page_size, base_ref, BIG, BIG, ws_boundary)
         f.write(draft)
         _pad(f, ALIGN_TABLE)
 
@@ -98,6 +124,15 @@ def write_jif(
             _pad(f, ALIGN_TABLE)
             t.itable_off = f.tell()
             f.write(it.tobytes())
+
+        if digests is not None:
+            for t in tensors:
+                dg = digests.get(t.name)
+                if dg is None:
+                    continue
+                _pad(f, ALIGN_TABLE)
+                t.digest_off = f.tell()
+                f.write(np.ascontiguousarray(dg, np.uint8).tobytes())
 
         _pad(f, ALIGN_DATA)
         data_off = f.tell()
@@ -109,7 +144,7 @@ def write_jif(
         os.fsync(f.fileno())
 
     # patch the header in place with final offsets (pad to reserved size)
-    final = _encode_header(meta, tensors, page_size, base_ref, data_off, data_len)
+    final = _encode_header(meta, tensors, page_size, base_ref, data_off, data_len, ws_boundary)
     assert len(final) <= len(draft), "header grew past its reservation"
     with open(tmp, "r+b") as f:
         f.seek(0)
@@ -123,23 +158,29 @@ def write_jif(
     return {"data_off": data_off, "data_len": data_len, "table_region": table_region}
 
 
-def _encode_header(meta, tensors, page_size, base_ref, data_off, data_len) -> bytes:
-    return msgpack.packb(
-        {
-            "version": VERSION,
-            "page_size": page_size,
-            "base": base_ref,
-            "meta": meta,
-            "tensors": [t.to_header() for t in tensors],
-            "data_off": data_off,
-            "data_len": data_len,
-        },
-        use_bin_type=True,
-    )
+def _encode_header(meta, tensors, page_size, base_ref, data_off, data_len, ws_boundary=None) -> bytes:
+    header = {
+        "version": VERSION,
+        "page_size": page_size,
+        "base": base_ref,
+        "meta": meta,
+        "tensors": [t.to_header() for t in tensors],
+        "data_off": data_off,
+        "data_len": data_len,
+    }
+    if ws_boundary is not None:
+        header["ws_boundary"] = ws_boundary
+    if base_ref and base_ref.get("path"):
+        header["parent"] = base_ref
+    return msgpack.packb(header, use_bin_type=True)
 
 
 class JifReader:
-    """Header + interval tables in two small reads; data via pread ranges."""
+    """Header + interval tables in two small reads; data via pread ranges.
+
+    All post-construction reads go through ``os.pread`` on the shared fd, so
+    one reader is safe under concurrent itable/digest/data loads from the
+    scheduler's threads (no shared seek pointer)."""
 
     def __init__(self, path: str):
         self.path = path
@@ -149,6 +190,7 @@ class JifReader:
             raise ValueError(f"{path}: not a JIF file")
         hlen = int.from_bytes(self._f.read(4), "little")
         self.header = msgpack.unpackb(self._f.read(hlen), raw=False)
+        self.version: int = self.header.get("version", 1)
         self.page_size: int = self.header["page_size"]
         self.meta: Dict = self.header["meta"]
         self.base_ref = self.header.get("base")
@@ -158,12 +200,30 @@ class JifReader:
         self.by_name = {t.name: t for t in self.tensors}
         self._itables: Dict[str, IntervalTable] = {}
 
+    @property
+    def n_data_chunks(self) -> int:
+        return -(-self.data_len // self.page_size)
+
+    @property
+    def ws_boundary(self) -> int:
+        """Data-segment chunk where the traced working set ends.  v1 images
+        carry no boundary: the whole data segment is the working set."""
+        ws = self.header.get("ws_boundary")
+        return self.n_data_chunks if ws is None else int(ws)
+
+    @property
+    def parent(self) -> Optional[Dict]:
+        """On-disk parent ref ({name, path}) for delta images, else None."""
+        p = self.header.get("parent")
+        if p is None and self.base_ref and self.base_ref.get("path"):
+            p = self.base_ref
+        return p
+
     # --- metadata restore: batched, zero-deserialize interval tables -------
     def itable(self, name: str) -> IntervalTable:
         if name not in self._itables:
             t = self.by_name[name]
-            self._f.seek(t.itable_off)
-            raw = self._f.read(t.itable_rows * 4 * 8)
+            raw = os.pread(self._f.fileno(), t.itable_rows * 4 * 8, t.itable_off)
             self._itables[name] = IntervalTable(
                 np.frombuffer(raw, np.int64).reshape(-1, 4)
             )
@@ -172,6 +232,19 @@ class JifReader:
     def load_all_itables(self) -> None:
         for t in self.tensors:
             self.itable(t.name)
+
+    def digests(self, name: str) -> Optional[np.ndarray]:
+        """Stored per-tensor chunk digests ((n, 16) uint8), or None for v1
+        images written before digests were captured."""
+        t = self.by_name[name]
+        if not t.digest_off:
+            return None
+        raw = os.pread(self._f.fileno(), t.digest_rows * _DIGEST_BYTES, t.digest_off)
+        return np.frombuffer(raw, np.uint8).reshape(-1, _DIGEST_BYTES)
+
+    @property
+    def has_digests(self) -> bool:
+        return all(t.digest_off for t in self.tensors) if self.tensors else False
 
     # --- data segment I/O ---------------------------------------------------
     def pread_chunks(self, chunk_start: int, n: int) -> bytes:

@@ -60,13 +60,16 @@ def classify(
     buf: memoryview,
     page_size: int,
     base_digests: Optional[np.ndarray] = None,
+    digests: Optional[np.ndarray] = None,
 ) -> np.ndarray:
-    """(n,) uint8 chunk kinds for one tensor's bytes."""
+    """(n,) uint8 chunk kinds for one tensor's bytes.  Pass precomputed
+    ``digests`` of ``buf`` to avoid hashing twice (the snapshot pipeline
+    hashes every tensor anyway for the v2 digest region)."""
     zm = zero_mask(buf, page_size)
     kinds = np.full(zm.shape, KIND_PRIVATE, np.uint8)
     kinds[zm] = KIND_ZERO
     if base_digests is not None and len(base_digests):
-        dg = chunk_digests(buf, page_size)
+        dg = digests if digests is not None else chunk_digests(buf, page_size)
         m = min(len(dg), len(base_digests))
         same = (dg[:m] == base_digests[:m]).all(axis=1)
         # BASE beats ZERO only when the base chunk is also zero — prefer ZERO

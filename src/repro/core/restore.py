@@ -39,6 +39,7 @@ from repro.core.treeutil import unflatten_state
 class RestoreStats:
     metadata_s: float = 0.0
     first_tensor_s: float = 0.0
+    working_set_s: float = 0.0  # all working-set tensors resident (phase 1)
     total_s: float = 0.0
     bytes_read: int = 0
     base_bytes: int = 0
@@ -47,14 +48,20 @@ class RestoreStats:
     demand_boosts: int = 0
     restore_ops: int = 1  # ONE batched metadata restore (vs CRIU's replay)
     major_faults: int = 0  # guaranteed population: always 0 for spice
+    image_bytes: int = 0      # logical bytes of the restored state tree
+    ws_tensors: int = 0       # tensors inside the traced working set
+    residual_tensors: int = 0  # tensors streaming after the ws boundary
 
     # Snapshot consistency: the prefetcher mutates counters concurrently
     # with readers (the engine reports stats while the stream is live), so
     # every mutation happens under a lock and ``as_dict`` takes a coherent
-    # snapshot.  ``mark_complete`` fires once the last tensor finalized.
+    # snapshot.  Completion is two-phase: ``mark_working_set`` fires when
+    # every tensor before the ws boundary finalized (execution-ready),
+    # ``mark_complete`` once the last residual tensor landed.
     def __post_init__(self):
         self._lock = threading.Lock()
         self._complete = threading.Event()
+        self._ws = threading.Event()
 
     def add(self, **deltas) -> None:
         with self._lock:
@@ -66,9 +73,22 @@ class RestoreStats:
             if not getattr(self, field):
                 setattr(self, field, value)
 
+    def mark_working_set(self, working_set_s: float) -> None:
+        with self._lock:
+            self.working_set_s = working_set_s
+        self._ws.set()
+
+    def wait_working_set(self, timeout: Optional[float] = None) -> bool:
+        return self._ws.wait(timeout)
+
+    @property
+    def ws_ready(self) -> bool:
+        return self._ws.is_set()
+
     def mark_complete(self, total_s: float) -> None:
         with self._lock:
             self.total_s = total_s
+        self._ws.set()  # a drained stream implies the working set landed
         self._complete.set()
 
     def wait_complete(self, timeout: Optional[float] = None) -> bool:
@@ -82,6 +102,7 @@ class RestoreStats:
         with self._lock:
             d = dataclasses.asdict(self)
         d["complete"] = self.complete
+        d["ws_ready"] = self.ws_ready
         return d
 
 
@@ -127,6 +148,9 @@ class TensorHandle:
         return self._ev.is_set()
 
 
+BACKGROUND_PRIORITY = -1  # residual streams yield to fresh demand streams
+
+
 class SpiceRestorer:
     def __init__(
         self,
@@ -160,23 +184,25 @@ class SpiceRestorer:
         path: str,
         on_ready: Optional[Callable[[str, np.ndarray], None]] = None,
         wait: bool = True,
+        on_working_set: Optional[Callable[[], None]] = None,
     ) -> Tuple[Any, Dict, Dict[str, TensorHandle], RestoreStats]:
         """Returns (state, meta, handles, stats). With ``wait=False`` the
         state tree contains TensorHandles being filled by the scheduler —
-        callers overlap execution with restore by waiting per tensor.  The
-        JIF reader is closed (and ``stats`` marked complete) when the last
-        tensor finalizes, whether or not the caller waited."""
+        callers overlap execution with restore by waiting per tensor.
+
+        Completion is two-phase: once every tensor inside the traced
+        working set finalizes, ``stats.mark_working_set`` fires (and
+        ``on_working_set``, if given, runs on the prefetcher thread) while
+        the residual keeps streaming at background priority — demand boosts
+        still promote individual residual tensors on ``TensorHandle.wait``.
+        The JIF reader is closed (and ``stats`` marked complete) when the
+        last tensor finalizes, whether or not the caller waited."""
         stats = RestoreStats()
         t0 = time.perf_counter()
         r = JifReader(path)
         r.load_all_itables()
         meta = r.meta
-        base = self.node_cache.get((r.base_ref or {}).get("name"))
-        if r.base_ref and base is None:
-            r.close()
-            raise FileNotFoundError(
-                f"base image {r.base_ref['name']!r} not in node cache"
-            )
+        base = self._resolve_base(r)
 
         handles: Dict[str, TensorHandle] = {}
         buffers: Dict[str, np.ndarray] = {}
@@ -184,6 +210,11 @@ class SpiceRestorer:
         for t in r.tensors:
             handles[t.name] = TensorHandle(t.name, t.shape, t.dtype)
             buffers[t.name] = self.pool.acquire(t.nbytes)
+        ws_names = set(meta.get("working_set") or order)
+        ws_remaining = [sum(1 for t in r.tensors if t.name in ws_names)]
+        stats.image_bytes = sum(t.nbytes for t in r.tensors)
+        stats.ws_tensors = ws_remaining[0]
+        stats.residual_tensors = len(r.tensors) - ws_remaining[0]
         stats.metadata_s = time.perf_counter() - t0
 
         def finalize(name: str):
@@ -200,6 +231,17 @@ class SpiceRestorer:
             stats.set_once("first_tensor_s", time.perf_counter() - t0)
             if on_ready is not None:
                 on_ready(name, arr)
+            if name in ws_names:
+                # the stream serves one tensor at a time, so this counter
+                # only ever moves on the serving thread
+                ws_remaining[0] -= 1
+                if ws_remaining[0] == 0 and not stats.ws_ready:
+                    stats.mark_working_set(time.perf_counter() - t0)
+                    # phase 2: residual streams on at background priority;
+                    # per-tensor demand boosts still overtake it
+                    stream.set_priority(BACKGROUND_PRIORITY)
+                    if on_working_set is not None:
+                        on_working_set()
 
         def fill_base_zero(name: str) -> int:
             """memcpy BASE runs from the node cache; ZERO runs are free.
@@ -285,6 +327,63 @@ class SpiceRestorer:
             leaves = {name: h.wait() for name, h in leaves.items()}
         state = unflatten_state(meta["tree"], leaves)
         return state, meta, handles, stats
+
+    # one bootstrap per parent key at a time: N sibling delta restores that
+    # all miss the parent must not each materialize the full image
+    _bootstrap_meta = threading.Lock()
+    _bootstrap_locks: Dict[str, threading.Lock] = {}
+
+    def _resolve_base(self, r: JifReader) -> Optional[BaseImage]:
+        """Resolve the image's base: from the node cache, or — for delta
+        chains — bootstrapped from the parent JIF on disk (recursively, so a
+        fresh node can restore any depth of chain from the snapshot store).
+        The ref's name binds the parent file's identity (mtime+size): if the
+        file on disk no longer matches what this image was classified
+        against, the restore fails loudly instead of corrupting silently."""
+        ref = r.base_ref
+        if not ref:
+            return None
+        name = ref.get("name")
+        base = self.node_cache.get(name)
+        if base is None and ref.get("path"):
+            from repro.core.lifecycle import parent_cache_key
+
+            with SpiceRestorer._bootstrap_meta:
+                lock = SpiceRestorer._bootstrap_locks.setdefault(
+                    name, threading.Lock()
+                )
+            with lock:
+                base = self.node_cache.get(name)  # won the race? already in
+                if base is None:
+                    try:
+                        current_key = parent_cache_key(ref["path"])
+                    except FileNotFoundError:
+                        current_key = None
+                    if current_key is not None and current_key != name:
+                        r.close()
+                        raise FileNotFoundError(
+                            f"parent JIF {ref['path']!r} changed on disk "
+                            f"since this delta was written (key mismatch)"
+                        )
+                    if current_key is not None:
+                        try:
+                            base = BaseImage.from_jif(
+                                ref["path"], name=name,
+                                node_cache=self.node_cache,
+                                iosched=self.iosched,
+                                simulate_read_bw=self.simulate_read_bw,
+                            )
+                        except FileNotFoundError:
+                            base = None
+                    if base is not None:
+                        self.node_cache.put(base)
+        if base is None:
+            r.close()
+            raise FileNotFoundError(
+                f"base image {ref.get('name')!r} not in node cache"
+                + (f" and parent JIF {ref['path']!r} unusable" if ref.get("path") else "")
+            )
+        return base
 
     @staticmethod
     def _boost(stream: IOStream, stats: RestoreStats, name: str) -> bool:

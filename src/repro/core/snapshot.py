@@ -1,141 +1,40 @@
-"""Snapshot writer: state -> JIF.
+"""Snapshot writer: state -> JIF — compatibility wrapper.
 
-Reproduces the paper's offline JIF-preparation pipeline (§4.1):
-  1. per-subsystem trimming (the MADV_FREE->DONTNEED / stack-trim analogue):
-     caller-supplied trim rules drop state the function won't need;
-  2. chunk classification {ZERO, BASE, PRIVATE} against an optional base
-     image (overlay dedup; zero elision);
-  3. working-set relocation: PRIVATE chunks are written contiguously in
-     first-access order so restore is one sequential high-throughput read;
-  4. batched metadata: one msgpack header (+ raw interval tables).
+The actual writer is the staged :class:`repro.core.lifecycle.SnapshotPipeline`
+(trim → classify → relocate → write, §4.1); this free function keeps the
+seed's call surface for tests, benchmarks, and the fine-tune manager.
 """
 from __future__ import annotations
 
-import dataclasses
-import time
 from typing import Any, Callable, Dict, List, Optional
 
-import numpy as np
+from repro.core import overlay
+from repro.core.lifecycle import SnapshotPipeline, SnapshotStats
 
-from repro.core import jif, overlay
-from repro.core.cache import BaseImage
-from repro.core.treeutil import flatten_state
-
-
-@dataclasses.dataclass
-class SnapshotStats:
-    total_bytes: int = 0
-    private_bytes: int = 0
-    base_bytes: int = 0
-    zero_bytes: int = 0
-    n_tensors: int = 0
-    n_intervals: int = 0
-    write_s: float = 0.0
-    classify_s: float = 0.0
-
-    @property
-    def file_fraction(self) -> float:
-        return self.private_bytes / max(self.total_bytes, 1)
-
-    def as_dict(self) -> Dict[str, Any]:
-        d = dataclasses.asdict(self)
-        d["file_fraction"] = self.file_fraction
-        return d
+__all__ = ["snapshot", "SnapshotStats"]
 
 
 def snapshot(
     state,
     path: str,
     *,
-    base: Optional[BaseImage] = None,
+    base=None,
+    parent: Optional[str] = None,
     access_order: Optional[List[str]] = None,
+    working_set: Optional[List[str]] = None,
     page_size: int = overlay.DEFAULT_PAGE,
     meta: Optional[Dict[str, Any]] = None,
     trim_fn: Optional[Callable] = None,
+    node_cache=None,
 ) -> SnapshotStats:
-    t0 = time.perf_counter()
-    if trim_fn is not None:
-        state = trim_fn(state)
-    leaves, treedesc = flatten_state(state)
-    by_name = dict(leaves)
-    names = [n for n, _ in leaves]
-
-    # access-order relocation: listed tensors first, stragglers after
-    if access_order:
-        listed = [n for n in access_order if n in by_name]
-        rest = [n for n in names if n not in set(listed)]
-        order = listed + rest
-        ws_names = listed
-    else:
-        order = names
-        ws_names = names
-
-    stats = SnapshotStats(n_tensors=len(names))
-    entries: List[jif.TensorEntry] = []
-    itables: Dict[str, np.ndarray] = {}
-    buffers: Dict[str, np.ndarray] = {}
-    cursor = 0  # data-segment offset in chunks
-
-    for name in order:
-        arr = by_name[name]
-        raw = np.ascontiguousarray(arr).view(np.uint8).reshape(-1)
-        buffers[name] = raw
-        kinds = overlay.classify(
-            memoryview(raw), page_size, base.digests(name) if base else None
-        )
-        table = overlay.intervals_from_kinds(kinds)
-        for row in table:
-            if row[2] == overlay.KIND_PRIVATE:
-                row[3] = cursor
-                cursor += row[1]
-        itables[name] = table
-        stats.n_intervals += len(table)
-        nb = raw.nbytes
-        stats.total_bytes += nb
-        counts = overlay.IntervalTable(table).counts()
-        last_partial = nb - (overlay.n_chunks(nb, page_size) - 1) * page_size
-
-        def _kind_bytes(k):
-            n = counts[k]
-            # last chunk may be partial; attribute to its kind
-            if n and int(kinds[-1]) == k:
-                return (n - 1) * page_size + last_partial
-            return n * page_size
-
-        stats.private_bytes += _kind_bytes(overlay.KIND_PRIVATE)
-        stats.base_bytes += _kind_bytes(overlay.KIND_BASE)
-        stats.zero_bytes += _kind_bytes(overlay.KIND_ZERO)
-        entries.append(
-            jif.TensorEntry(name=name, dtype=str(arr.dtype), shape=tuple(arr.shape), nbytes=nb)
-        )
-    stats.classify_s = time.perf_counter() - t0
-
-    def data_iter():
-        for name in order:
-            raw = buffers[name]
-            for start, n, _src in overlay.IntervalTable(itables[name]).private_runs():
-                chunk = raw[start * page_size : (start + n) * page_size]
-                if len(chunk) % page_size:  # pad the final partial chunk
-                    chunk = np.concatenate(
-                        [chunk, np.zeros(page_size - len(chunk) % page_size, np.uint8)]
-                    )
-                yield chunk.tobytes()
-
-    header_meta = dict(meta or {})
-    header_meta.setdefault("tree", treedesc)
-    header_meta.setdefault("access_order", order)
-    header_meta.setdefault("working_set", ws_names)
-    header_meta.setdefault("created_at", time.time())
-
-    t1 = time.perf_counter()
-    jif.write_jif(
+    return SnapshotPipeline(
+        page_size=page_size, trim_fn=trim_fn, node_cache=node_cache
+    ).run(
+        state,
         path,
-        header_meta,
-        entries,
-        itables,
-        data_iter(),
-        page_size,
-        base_ref={"name": base.name} if base else None,
+        base=base,
+        parent=parent,
+        access_order=access_order,
+        working_set=working_set,
+        meta=meta,
     )
-    stats.write_s = time.perf_counter() - t1
-    return stats

@@ -70,6 +70,13 @@ class AccessRecorder:
         )
 
     @property
+    def touched(self) -> List[str]:
+        """Only the leaves execution actually touched — the traced working
+        set; ``order`` appends the untouched stragglers after them."""
+        with self._lock:
+            return list(self._order)
+
+    @property
     def order(self) -> List[str]:
         with self._lock:
             out = list(self._order)
@@ -78,20 +85,28 @@ class AccessRecorder:
 
 
 def trace_access_order(
-    state, run_fn: Callable[[Any], None], max_iters: int = 3
-) -> List[str]:
+    state,
+    run_fn: Callable[[Any], None],
+    max_iters: int = 3,
+    return_touched: bool = False,
+):
     """Run ``run_fn(state_view)`` under tracing until the first-touch order
     reaches a fixed point (paper: iterative re-tracing to kill tracer
-    artifacts)."""
+    artifacts).  With ``return_touched`` also returns the touched-only
+    prefix (the traced working set, without untouched stragglers)."""
     prev: Optional[List[str]] = None
     order: List[str] = []
+    touched: List[str] = []
     for _ in range(max_iters):
         rec = AccessRecorder(state)
         run_fn(rec.view())
         order = rec.order
+        touched = rec.touched
         if order == prev:
             break
         prev = order
+    if return_touched:
+        return order, touched
     return order
 
 

@@ -107,3 +107,9 @@ class ServerlessNode:
 
     def evict(self, fname: Optional[str] = None) -> None:
         self._sched.evict(fname)
+
+    def record_access(self, *args, **kwargs):
+        return self._sched.record_access(*args, **kwargs)
+
+    def relayout(self, *args, **kwargs):
+        return self._sched.relayout(*args, **kwargs)

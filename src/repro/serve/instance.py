@@ -3,9 +3,14 @@
 One :class:`FunctionInstance` per published function per node, moving
 through an explicit state machine::
 
-    COLD ──begin_restore──▶ RESTORING ──promote──▶ WARM ──evict/TTL──▶ EVICTED
-      ▲                                                                  │
-      └────────────────────── (next invocation) ─────────────────────────┘
+    COLD ──begin_restore──▶ RESTORING ──ws complete──▶ WARMING ──residual──▶ WARM
+      ▲                         │ (no residual: promote straight to WARM)      │
+      └───────────── (next invocation) ◀── EVICTED ◀────────── evict/TTL ──────┘
+
+WARMING is the paper's WARM-at-working-set promotion: every tensor before
+the JIF's ws boundary is resident, so invocations route warm and generate
+layer-gated over the residual handles while the tail streams at background
+priority; the residual's completion finalizes WARM (resolved device tree).
 
 The instance owns everything a live function needs: the restore handle tree
 (TensorHandles while the prefetcher streams), the resolver used to gate
@@ -186,6 +191,7 @@ def faasnap_wait(tree):
 class InstanceState(enum.Enum):
     COLD = "cold"
     RESTORING = "restoring"
+    WARMING = "warming"  # working set resident; residual streaming in
     WARM = "warm"
     EVICTED = "evicted"
 
@@ -212,9 +218,10 @@ class FunctionInstance:
         self.warm_expiry = 0.0   # 0 = no keep-alive
         self.memory_bytes = 0
         self.inflight = 0
+        self.ws_ready = False    # working set resident (WARMING/WARM)
         self.counters = {
             "cold_starts": 0, "warm_hits": 0, "joined": 0,
-            "ttl_evictions": 0, "lru_evictions": 0,
+            "ttl_evictions": 0, "lru_evictions": 0, "ws_promotions": 0,
         }
 
     # ------------------------------------------------------------ queries
@@ -231,7 +238,17 @@ class FunctionInstance:
         return self.inflight == 0
 
     # -------------------------------------------------------- transitions
-    # All four helpers assume ``self.cond`` is held by the caller.
+    # All transition helpers assume ``self.cond`` is held by the caller.
+    def _clear(self, next_state: "InstanceState") -> None:
+        """Drop all resident state and move to ``next_state`` (the single
+        reset point: every field added to the instance clears here)."""
+        self.state = next_state
+        self.tree = None
+        self.getter = None
+        self.ws_ready = False
+        self.warm_expiry = 0.0
+        self.memory_bytes = 0
+        self.cond.notify_all()
     def begin_restore(self, mode: str) -> int:
         assert self.state in (InstanceState.COLD, InstanceState.EVICTED), self.state
         self.state = InstanceState.RESTORING
@@ -239,6 +256,7 @@ class FunctionInstance:
         self.restore_mode = mode
         self.tree = None
         self.getter = None
+        self.ws_ready = False
         self.counters["cold_starts"] += 1
         return self.generation
 
@@ -249,46 +267,68 @@ class FunctionInstance:
         self.restore_stats = stats
         self.cond.notify_all()
 
+    def promote_warming(self, ttl_s: float, now: float, est_bytes: int) -> None:
+        """RESTORING → WARMING at working-set completion: the traced working
+        set is resident, so invocations route warm (layer-gated over the
+        residual handles) while the residual keeps streaming at background
+        priority.  ``est_bytes`` (the image's logical size) stands in for
+        memory accounting until the resolved tree replaces the handles."""
+        assert self.state is InstanceState.RESTORING, self.state
+        assert ttl_s > 0, "early promotion only makes sense with keep-alive"
+        self.state = InstanceState.WARMING
+        self.ws_ready = True
+        self.warm_expiry = now + ttl_s
+        self.memory_bytes = est_bytes
+        self.last_used = now
+        self.cond.notify_all()
+
+    def finalize_warm(self, resolved_tree, now: float) -> None:
+        """WARMING → WARM once the residual stream drained: swap the handle
+        tree for the resolved (device-installed) one and account its real
+        footprint.  The keep-alive window set at WARMING promotion stands."""
+        assert self.state is InstanceState.WARMING, self.state
+        self.state = InstanceState.WARM
+        self.tree = resolved_tree
+        self.getter = None
+        self.memory_bytes = _tree_bytes(resolved_tree)
+        self.cond.notify_all()
+
     def promote_warm(self, resolved_tree, ttl_s: float, now: float) -> None:
         assert self.state is InstanceState.RESTORING, self.state
         if ttl_s > 0:
             self.state = InstanceState.WARM
+            self.ws_ready = True
             self.tree = resolved_tree
             self.getter = None
             self.warm_expiry = now + ttl_s
             self.memory_bytes = _tree_bytes(resolved_tree)
         else:
             # no keep-alive: drop straight back to COLD, free the state
-            self.state = InstanceState.COLD
-            self.tree = None
-            self.getter = None
-            self.warm_expiry = 0.0
-            self.memory_bytes = 0
+            self._clear(InstanceState.COLD)
         self.last_used = now
         self.cond.notify_all()
 
     def evict(self, reason: str = "manual") -> bool:
         """WARM → EVICTED (idle instances only).  Returns True if evicted."""
         if self.state is not InstanceState.WARM or not self.idle:
-            return False
-        self.state = InstanceState.EVICTED
-        self.tree = None
-        self.getter = None
-        self.warm_expiry = 0.0
-        self.memory_bytes = 0
+            return False  # WARMING is never evictable: its residual stream
+            # is still in flight and would write into freed buffers
+        self._clear(InstanceState.EVICTED)
         if reason == "ttl":
             self.counters["ttl_evictions"] += 1
         elif reason == "lru":
             self.counters["lru_evictions"] += 1
         return True
 
+    def abort_warming(self) -> None:
+        """WARMING → EVICTED when residual finalization failed."""
+        if self.state is InstanceState.WARMING:
+            self._clear(InstanceState.EVICTED)
+
     def abort_restore(self) -> None:
         """RESTORING → EVICTED on a failed restore, releasing joiners."""
         if self.state is InstanceState.RESTORING:
-            self.state = InstanceState.EVICTED
-            self.tree = None
-            self.getter = None
-            self.cond.notify_all()
+            self._clear(InstanceState.EVICTED)
 
 
 def _tree_bytes(tree) -> int:

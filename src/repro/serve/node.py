@@ -41,7 +41,8 @@ from repro.core import (
 )
 from repro.core import baselines
 from repro.core.restore import RestoreStats
-from repro.core.trace import trace_access_order
+from repro.core.snapshot import SnapshotStats
+from repro.core.trace import AccessRecorder, trace_access_order
 from repro.core.treeutil import unflatten_state
 from repro.serve.instance import (
     FunctionInstance,
@@ -130,6 +131,11 @@ class NodeScheduler:
         self._exec = ThreadPoolExecutor(
             max_workers=max_workers, thread_name_prefix="invoke"
         )
+        # in-flight residual streams (fname -> RestoreStats of a WARMING
+        # instance): counted against the memory budget until they drain
+        self._residual: Dict[str, RestoreStats] = {}
+        # recorded first-touch orders from warm generations (relayout feed)
+        self._recorded: Dict[str, List[str]] = {}
         self.stats = {
             "invocations": 0,
             "warm_hits": 0,
@@ -137,6 +143,8 @@ class NodeScheduler:
             "joined_restores": 0,
             "ttl_evictions": 0,
             "lru_evictions": 0,
+            "ws_promotions": 0,
+            "relayouts": 0,
         }
 
     def _bump(self, key: str, n: int = 1) -> None:
@@ -164,19 +172,30 @@ class NodeScheduler:
         state = layerwise_state(cfg, params)
 
         # pre-warm trace: run one tiny invocation under the recorder; the
-        # recorder's lazy leaves record first touch when jit coerces them
+        # recorder's lazy leaves record first touch when jit coerces them.
+        # ``touched`` is the traced working set; untouched stragglers (and
+        # any extra_state below) land after the ws boundary as residual.
         def run(view):
             generate(cfg, None, view, np.zeros((1, 4), np.int32), 2)
 
-        order = trace_access_order(state, run, max_iters=2)
+        order, touched = trace_access_order(
+            state, run, max_iters=2, return_touched=True
+        )
         jif_path = f"{dirpath}/{name}.jif"
         base = self.node_cache.get(base_name)
         if "jif" in formats:
+            full_state = state
+            if extra_state is not None:
+                # VM-style snapshots capture scratch/optimizer memory too;
+                # in the JIF it streams as residual behind the ws boundary
+                full_state = dict(state)
+                full_state["__extra__"] = extra_state
             snapshot(
-                state,
+                full_state,
                 jif_path,
                 base=base,
                 access_order=order,
+                working_set=touched,
                 meta={"arch": cfg.name, "function": name},
             )
         if "criu" in formats:
@@ -250,15 +269,168 @@ class NodeScheduler:
         return n
 
     def warm_bytes(self) -> int:
+        """Resident warm-state bytes — WARMING instances count too: their
+        working set is resident and their residual stream is landing into
+        the same budgeted memory."""
         with self._ilock:
             insts = list(self._instances.values())
         return sum(
-            i.memory_bytes for i in insts if i.state is InstanceState.WARM
+            i.memory_bytes
+            for i in insts
+            if i.state in (InstanceState.WARM, InstanceState.WARMING)
         )
+
+    def residual_streams(self) -> int:
+        """In-flight residual streams (WARMING instances' background tails)."""
+        with self._slock:
+            return sum(1 for s in self._residual.values() if not s.complete)
+
+    def drain_residual(self, timeout: float = 60.0) -> bool:
+        """Block until every residual stream has drained and every WARMING
+        instance finalized (benchmarks/eviction barriers)."""
+        deadline = time.time() + timeout
+        while time.time() < deadline:
+            with self._slock:
+                pending = bool(self._residual)
+            if not pending:
+                with self._ilock:
+                    insts = list(self._instances.values())
+                if not any(i.state is InstanceState.WARMING for i in insts):
+                    return True
+            time.sleep(0.01)
+        return False
 
     def instance(self, fname: str) -> Optional[FunctionInstance]:
         with self._ilock:
             return self._instances.get(fname)
+
+    # ------------------------------------------------- residual finalization
+    def _watch_residual(self, fname, inst, state, getter, stats) -> None:
+        """Track a WARMING instance's residual stream and finalize WARM (on
+        a dedicated thread) once it drains; a failed residual evicts."""
+        with self._slock:
+            self._residual[fname] = stats
+        generation = inst.generation
+
+        def finalize():
+            try:
+                if not stats.wait_complete(timeout=600):
+                    # stalled residual: never leave an unevictable WARMING
+                    # instance pinned against the budget forever
+                    raise TimeoutError(f"{fname}: residual stream stalled")
+                resolved = getter(state)
+                with inst.cond:
+                    if (
+                        inst.state is InstanceState.WARMING
+                        and inst.generation == generation
+                    ):
+                        inst.finalize_warm(resolved, time.time())
+            except BaseException:
+                with inst.cond:
+                    if (
+                        inst.state is InstanceState.WARMING
+                        and inst.generation == generation
+                    ):
+                        inst.abort_warming()
+            finally:
+                with self._slock:
+                    if self._residual.get(fname) is stats:
+                        del self._residual[fname]
+                self._enforce_budget(keep=fname)
+
+        threading.Thread(
+            target=finalize, name=f"residual-{fname}", daemon=True
+        ).start()
+
+    # ---------------------------------------------------- record → relayout
+    def record_access(
+        self,
+        fname: str,
+        prompt: Optional[np.ndarray] = None,
+        max_new_tokens: int = 4,
+        cfg: Optional[ModelConfig] = None,
+    ) -> List[str]:
+        """Capture the ACTUAL first-touch order from a warm generation (the
+        paper's §5 kernel tracing module, fed by production traffic instead
+        of the offline pre-warm run).  The instance must be WARM; the traced
+        order is kept for :meth:`relayout`.  Returns the touched order."""
+        from repro.configs import get_config
+
+        spec = self.registry.get(fname)
+        cfg = cfg or get_config(spec.arch)
+        inst = self.instance(fname)
+        if inst is None:
+            raise RuntimeError(f"{fname}: record_access needs a WARM instance")
+        if prompt is None:
+            prompt = np.zeros((1, 4), np.int32)
+        with inst.cond:
+            # check + pin atomically: a concurrent eviction between an
+            # unlocked check and the inflight bump would null the tree
+            if inst.state is not InstanceState.WARM:
+                raise RuntimeError(f"{fname}: record_access needs a WARM instance")
+            tree = inst.tree
+            inst.inflight += 1
+        try:
+            rec = AccessRecorder(tree)
+            generate(cfg, None, rec.view(), prompt, max_new_tokens)
+            order = rec.touched
+        finally:
+            with inst.cond:
+                inst.inflight -= 1
+                inst.cond.notify_all()
+        with self._slock:
+            self._recorded[fname] = order
+        return order
+
+    def recorded_order(self, fname: str) -> Optional[List[str]]:
+        with self._slock:
+            return self._recorded.get(fname)
+
+    def relayout(self, fname: str, order: Optional[List[str]] = None) -> SnapshotStats:
+        """Re-snapshot a function with the recorded first-touch order: the
+        JIF data segment is rewritten so the observed working set sits in
+        front of the boundary — closing the record → relayout → faster-TTFT
+        loop.  Uses the warm instance's state when resident, else restores
+        the current image once."""
+        spec = self.registry.get(fname)
+        if order is None:
+            order = self.recorded_order(fname)
+        if order is None:
+            raise RuntimeError(
+                f"{fname}: no recorded access order — call record_access first"
+            )
+        inst = self.instance(fname)
+        state = None
+        if inst is not None:
+            with inst.cond:  # check + pin atomically (cf. record_access)
+                if inst.state is InstanceState.WARM:
+                    tree = inst.tree
+                    inst.inflight += 1
+                else:
+                    tree = None
+            if tree is not None:
+                try:
+                    state = jax.tree.map(np.asarray, tree)
+                finally:
+                    with inst.cond:
+                        inst.inflight -= 1
+                        inst.cond.notify_all()
+        if state is None:
+            restorer = SpiceRestorer(
+                pool=self.pool, node_cache=self.node_cache,
+                pipelined=False, iosched=self.iosched,
+            )
+            state, _, _, _ = restorer.restore(spec.jif_path)
+        stats = snapshot(
+            state,
+            spec.jif_path,
+            base=self.node_cache.get(spec.base_image),
+            access_order=order,
+            working_set=order,
+            meta={"arch": spec.arch, "function": fname, "relayout": True},
+        )
+        self._bump("relayouts")
+        return stats
 
     # ------------------------------------------------------------ internals
     def _get_instance(self, fname: str, spec, cfg) -> FunctionInstance:
@@ -286,11 +458,13 @@ class NodeScheduler:
                 now = time.time()
                 if inst.expired(now) and inst.evict("ttl"):
                     self._bump("ttl_evictions")
-                if inst.state is InstanceState.WARM:
+                if inst.state in (InstanceState.WARM, InstanceState.WARMING):
+                    # WARMING counts as warm: the working set is resident;
+                    # generation stays layer-gated over the residual handles
                     role = "warm"
                     inst.counters["warm_hits"] += 1
                     inst.last_used = now
-                    tree, getter = inst.tree, None
+                    tree, getter = inst.tree, inst.getter
                     inst.inflight += 1
                 elif inst.state is InstanceState.RESTORING:
                     if inst.tree is not None:
@@ -307,7 +481,7 @@ class NodeScheduler:
 
         try:
             if role == "warm":
-                toks, ttft = generate(cfg, None, tree, prompt, max_new_tokens)
+                toks, ttft = generate(cfg, getter, tree, prompt, max_new_tokens)
                 dt = time.perf_counter() - t0
                 self._bump("warm_hits")
                 return InvokeResult(
@@ -335,17 +509,37 @@ class NodeScheduler:
                     inst.publish_restore(state, getter, stats)
                 restore_wait = time.perf_counter() - t0  # sync restore part
                 toks, ttft = generate(cfg, getter, state, prompt, max_new_tokens)
-                if isinstance(stats, RestoreStats):
-                    # snapshot-consistent stats: wait for the stream to
-                    # finish (it also closes the JIF reader) before reporting
-                    stats.wait_complete(timeout=300)
-                total = time.perf_counter() - t0
-
                 ttl = self.keepalive.ttl_for(spec)
                 now = time.time()
-                with inst.cond:
-                    resolved = getter(state) if (getter and ttl > 0) else state
-                    inst.promote_warm(resolved, ttl, now)
+                if (
+                    isinstance(stats, RestoreStats)
+                    and stats.residual_tensors > 0
+                    and ttl > 0
+                    and getter is not None
+                    # two-phase promotion: WARM-at-working-set.  Wait only
+                    # for the traced working set, promote to WARMING so the
+                    # next invocations route warm immediately, and finalize
+                    # WARM in the background once the residual drains.  A
+                    # timed-out working set (stalled storage) falls through
+                    # to the synchronous full-restore path: an instance must
+                    # never claim warm without its working set resident.
+                    and stats.wait_working_set(timeout=300)
+                ):
+                    with inst.cond:
+                        inst.promote_warming(ttl, now, est_bytes=stats.image_bytes)
+                        inst.counters["ws_promotions"] += 1
+                    self._bump("ws_promotions")
+                    self._watch_residual(fname, inst, state, getter, stats)
+                    total = time.perf_counter() - t0
+                else:
+                    if isinstance(stats, RestoreStats):
+                        # snapshot-consistent stats: wait for the stream to
+                        # finish (it closes the JIF reader) before reporting
+                        stats.wait_complete(timeout=300)
+                    total = time.perf_counter() - t0
+                    with inst.cond:
+                        resolved = getter(state) if (getter and ttl > 0) else state
+                        inst.promote_warm(resolved, ttl, now)
             except BaseException:
                 with inst.cond:
                     inst.abort_restore()

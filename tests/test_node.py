@@ -145,6 +145,74 @@ def test_lru_eviction_under_memory_budget(tmp_path):
     assert node.scheduler.stats["lru_evictions"] >= 2
 
 
+def test_warm_at_working_set_promotion(tmp_path):
+    """With residual state behind the ws boundary, the owner promotes at
+    working-set completion (WARMING) instead of waiting for the full image;
+    the residual finalizes WARM in the background."""
+    cfg = get_config(ARCH).reduced()
+    params = lm.init_params(cfg, jax.random.PRNGKey(31), jnp.float32)
+    node = ServerlessNode()
+    extra = {"opt": np.ones((1 << 20,), np.float32)}  # 4 MB residual tail
+    node.publish("ws-fn", cfg, params, str(tmp_path), warm_ttl_s=60,
+                 formats=("jif",), extra_state=extra)
+    r1 = node.invoke("ws-fn", PROMPT, max_new_tokens=3, mode="spice", cfg=cfg,
+                     simulate_read_bw=5e8)
+    assert r1.cold
+    assert r1.stats["ws_ready"]
+    assert r1.stats["residual_tensors"] > 0
+    assert node.scheduler.stats["ws_promotions"] == 1
+    inst = node.scheduler.instance("ws-fn")
+    assert inst.state in (InstanceState.WARMING, InstanceState.WARM)
+    assert inst.ws_ready and inst.memory_bytes > 0
+    # invocations during/after WARMING route warm (no second restore)
+    r2 = node.invoke("ws-fn", PROMPT, max_new_tokens=3, cfg=cfg)
+    assert not r2.cold
+    np.testing.assert_array_equal(r1.tokens, r2.tokens)
+    # the background residual stream drains and finalizes WARM
+    deadline = time.time() + 30
+    while time.time() < deadline and inst.state is not InstanceState.WARM:
+        time.sleep(0.05)
+    assert inst.state is InstanceState.WARM
+    assert inst.getter is None  # resolved device tree swapped in
+    assert node.scheduler.residual_streams() == 0
+    r3 = node.invoke("ws-fn", PROMPT, max_new_tokens=3, cfg=cfg)
+    assert not r3.cold
+    np.testing.assert_array_equal(r1.tokens, r3.tokens)
+
+
+def test_record_access_then_relayout(tmp_path):
+    """The §5 feedback loop: a warm generation is traced, relayout rewrites
+    the JIF with the observed order, and the next cold start still produces
+    identical tokens."""
+    from repro.core.jif import JifReader
+
+    cfg = get_config(ARCH).reduced()
+    params = lm.init_params(cfg, jax.random.PRNGKey(33), jnp.float32)
+    node = ServerlessNode()
+    node.publish("rl-fn", cfg, params, str(tmp_path), warm_ttl_s=60,
+                 formats=("jif",))
+    r1 = node.invoke("rl-fn", PROMPT, max_new_tokens=3, mode="spice", cfg=cfg)
+    assert r1.cold
+
+    order = node.scheduler.record_access("rl-fn", PROMPT, max_new_tokens=2, cfg=cfg)
+    assert order
+    assert node.scheduler.recorded_order("rl-fn") == order
+
+    stats = node.scheduler.relayout("rl-fn")
+    assert stats.ws_boundary > 0
+    assert stats.ws_tensors == len(order)
+    assert node.scheduler.stats["relayouts"] == 1
+    with JifReader(node.registry.get("rl-fn").jif_path) as r:
+        assert r.version == 2
+        assert r.meta["access_order"][: len(order)] == order
+        assert r.meta.get("relayout") is True
+
+    node.evict()
+    r2 = node.invoke("rl-fn", PROMPT, max_new_tokens=3, mode="spice", cfg=cfg)
+    assert r2.cold
+    np.testing.assert_array_equal(r1.tokens, r2.tokens)
+
+
 def test_instance_state_machine_transitions():
     from repro.core import FunctionSpec
     from repro.serve.instance import FunctionInstance
