@@ -76,8 +76,11 @@ def build_zoo(force: bool = False) -> ServerlessNode:
         key = jax.random.PRNGKey(17)  # same base weights per arch
         params = lm.init_params(cfg, key, jnp.float32)
         if node.node_cache.get(base_key) is None:
+            # operator-installed base: no JIF behind it, so the pressure
+            # reclaimer must not sacrifice it (restores could not recover)
             node.node_cache.put(
-                BaseImage.from_state(base_key, layerwise_state(cfg, params))
+                BaseImage.from_state(base_key, layerwise_state(cfg, params)),
+                evictable=False,
             )
         # "fine-tune": perturb the top ~40% of the stack + output head, so
         # the shared fraction lands in the paper's 17-51% ballpark (Fig 5)

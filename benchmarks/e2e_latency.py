@@ -8,7 +8,11 @@ subsystem (tracked in ``BENCH_coldstart.json`` at the repo root):
   vs the full-restore-wait (``spice_sync``) TTFT of the same image;
 * **delta-chain economics** — a fine-tuned state (<30% of pages dirty)
   snapshotted against its parent JIF writes a fraction of the full private
-  bytes and restores byte-identically through the chain.
+  bytes and restores byte-identically through the chain;
+* **memory pressure** — a node whose budget is smaller than the sum of the
+  invoked images runs N concurrent cold starts: all must complete via the
+  reclaim ladder with the ledger invariant intact, and the per-kind
+  high-water marks are recorded.
 """
 from __future__ import annotations
 
@@ -126,6 +130,92 @@ def _delta_rows(rows):
         }
 
 
+def _memory_pressure_rows(rows):
+    """Budget < sum of invoked images; N concurrent cold starts must all
+    complete via the reclaim ladder with the ledger invariant intact."""
+    import time as _time
+
+    import jax
+
+    from repro.configs import get_config
+    from repro.core.jif import JifReader
+    from repro.models import lm
+    from repro.serve.engine import ServerlessNode
+    from repro.serve.node import FixedTTLPolicy
+
+    n_fns = 4
+    cfg = get_config("qwen1.5-0.5b").reduced()
+    if not _smoke():
+        cfg = dataclasses.replace(
+            cfg, pattern_reps=10, n_layers=10, d_model=256, d_ff=512, head_dim=32
+        )
+    # keep-alive ON so completed restores stay resident and later
+    # admissions must actually reclaim (residual tails go first)
+    node = ServerlessNode(keepalive=FixedTTLPolicy(3600.0))
+    fnames = [f"mp-{i}" for i in range(n_fns)]
+    with tempfile.TemporaryDirectory() as d:
+        extra = {"opt": np.ones((1 << 20,), np.float32)}  # 4 MB residual
+        for i, fname in enumerate(fnames):
+            params = lm.init_params(cfg, jax.random.PRNGKey(80 + i))
+            node.publish(fname, cfg, params, d, formats=("jif",),
+                         extra_state=extra)
+        node.invoke(fnames[0], PROMPT, max_new_tokens=2, mode="spice_sync",
+                    cfg=cfg)  # compile-cache warmup
+        node.scheduler.drain_residual()
+        node.evict()
+
+        img_bytes = {}
+        for fname in fnames:
+            with JifReader(node.registry.get(fname).jif_path) as r:
+                img_bytes[fname] = sum(t.nbytes for t in r.tensors)
+        budget = node.pool.held_bytes + int(1.6 * max(img_bytes.values()))
+        assert sum(img_bytes.values()) > budget, "scenario must over-subscribe"
+        node.scheduler.memory_budget = budget
+
+        t0 = _time.perf_counter()
+        futures = [
+            node.submit(f, PROMPT, max_new_tokens=2, mode="spice", cfg=cfg)
+            for f in fnames
+        ]
+        peak = 0
+        while not all(f.done() for f in futures):
+            snap = node.memory.audit()  # asserts the ledger invariant live
+            peak = max(peak, snap["total"])
+            _time.sleep(0.005)
+        results = [f.result() for f in futures]
+        wall = _time.perf_counter() - t0
+        assert all(r.cold for r in results), "every pressure invocation completes"
+        node.scheduler.drain_residual()
+        node.memory.audit()
+
+    mstats = node.memory.snapshot_stats()
+    hw = node.memory.high_water()
+    pstats = node.pool.snapshot_stats()
+    rows.append(("memory_pressure/wall", wall * 1e6, f"{len(fnames)} tenants"))
+    rows.append(("memory_pressure/peak_vs_budget", peak / budget,
+                 "frac (must be <=1)"))
+    rows.append(("memory_pressure/reclaimed_mb",
+                 mstats["reclaimed_bytes"] / 1e6, ""))
+    SUMMARY["memory_pressure"] = {
+        "budget_bytes": budget,
+        "image_bytes_sum": sum(img_bytes.values()),
+        "tenants": len(fnames),
+        "all_completed": True,
+        "peak_held_bytes": peak,
+        "wall_s": wall,
+        "reclaims": mstats["reclaims"],
+        "reclaimed_bytes": mstats["reclaimed_bytes"],
+        "pressure_failures": mstats["pressure_failures"],
+        "residual_evictions": node.scheduler.stats["residual_evictions"],
+        "lru_evictions": node.scheduler.stats["lru_evictions"],
+        "high_water_bytes": hw,  # per-kind ledger high-water marks
+        # staging bytes the ledger could not admit (unmanaged transients):
+        # the honest overshoot above the budget, not hidden by the invariant
+        "pool_unmanaged_allocs": pstats["unmanaged_allocs"],
+        "pool_unmanaged_bytes_hw": pstats["unmanaged_bytes_hw"],
+    }
+
+
 def run() -> list:
     node = build_zoo()
     rows: list = []
@@ -157,6 +247,7 @@ def run() -> list:
 
     _coldstart_rows(node, fnames, rows)
     _delta_rows(rows)
+    _memory_pressure_rows(rows)
 
     if not _smoke():
         # derived: spice slowdown vs warm, speedup vs baselines

@@ -10,9 +10,12 @@ Prints ``name,us_per_call,derived`` CSV. Module map:
   roofline          -> EXPERIMENTS.md §Roofline (from dry-run artifacts)
 
 ``e2e_latency`` additionally drops ``BENCH_coldstart.json`` at the repo
-root (per-mode TTFT / working-set time / total restore time, plus the
-delta-chain economics) so CI can track the cold-start trajectory.  Set
-``BENCH_SMOKE=1`` for the CI-sized run (one function, one repetition).
+root (per-mode TTFT / working-set time / total restore time, the
+delta-chain economics, and the ``memory_pressure`` scenario — budget <
+sum of images, N concurrent cold starts completing via the reclaim
+ladder, with the ledger's per-kind memory high-water marks) so CI can
+track the cold-start trajectory.  Set ``BENCH_SMOKE=1`` for the CI-sized
+run (one function, one repetition).
 """
 import argparse
 import json

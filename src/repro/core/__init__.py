@@ -11,6 +11,17 @@ from repro.core.overlay import (
 )
 from repro.core.iosched import IOStream, PrefetchIOScheduler
 from repro.core.lifecycle import SnapshotPipeline
+from repro.core.memory import (
+    KIND_IMAGE_CACHE,
+    KIND_POOL,
+    KIND_RESIDUAL,
+    KIND_SCRATCH,
+    KIND_WORKING_SET,
+    MEMORY_KINDS,
+    MemoryPressureError,
+    MemoryRegion,
+    NodeMemoryManager,
+)
 from repro.core.pool import BufferPool
 from repro.core.restore import RestoreStats, SpiceRestorer, TensorHandle
 from repro.core.snapshot import SnapshotStats, snapshot
@@ -21,6 +32,15 @@ __all__ = [
     "BaseImage",
     "NodeImageCache",
     "BufferPool",
+    "NodeMemoryManager",
+    "MemoryRegion",
+    "MemoryPressureError",
+    "MEMORY_KINDS",
+    "KIND_POOL",
+    "KIND_IMAGE_CACHE",
+    "KIND_WORKING_SET",
+    "KIND_RESIDUAL",
+    "KIND_SCRATCH",
     "IOStream",
     "PrefetchIOScheduler",
     "SpiceRestorer",

@@ -21,6 +21,7 @@ from typing import Dict, Iterable, Optional, Tuple
 import numpy as np
 
 from repro.core import overlay
+from repro.core.memory import KIND_IMAGE_CACHE, MemoryPressureError, NodeMemoryManager
 from repro.core.treeutil import flatten_state
 
 
@@ -88,7 +89,15 @@ class BaseImage:
 
 
 class NodeImageCache:
-    """LRU cache of BaseImages shared by every restore on this node."""
+    """LRU cache of BaseImages shared by every restore on this node.
+
+    Attached to a :class:`~repro.core.memory.NodeMemoryManager`, every
+    resident image is charged to an ``image_cache`` region and eviction
+    becomes a registered *reclaimer* invoked under node memory pressure
+    (rung 1 of the ladder: after residual tails, before warm instances)
+    instead of only a private capacity LRU."""
+
+    RECLAIM_ORDER = 1  # ladder rung: residual (0) -> image cache -> warm LRU
 
     def __init__(self, capacity_bytes: int = 8 << 30):
         self.capacity = capacity_bytes
@@ -97,17 +106,89 @@ class NodeImageCache:
         # resident bytes, maintained incrementally (the evict loop used to
         # re-sum every image per iteration — O(n²) under churn)
         self.total_bytes = 0
+        self._memory: Optional[NodeMemoryManager] = None
+        self._regions: Dict[str, "object"] = {}  # name -> MemoryRegion
+        # names the pressure reclaimer must NOT evict: images with no
+        # on-disk parent to re-materialize from (operator-installed bases).
+        # Recoverable images (bootstrapped from a parent JIF) are fair game.
+        self._pinned: set = set()
         self.stats = {"hits": 0, "misses": 0, "evictions": 0, "base_bytes_served": 0}
 
-    def put(self, img: BaseImage) -> None:
+    # --------------------------------------------------------------- ledger
+    def attach(self, memory: NodeMemoryManager) -> None:
+        """Charge resident images to the node ledger and register this
+        cache's LRU eviction as the ladder's image-cache reclaimer."""
+        with self._lock:
+            if self._memory is memory:
+                return
+            self._memory = memory
+            imgs = list(self._images.values())
+        for img in imgs:
+            try:
+                region = memory.reserve(
+                    img.nbytes, KIND_IMAGE_CACHE, owner=img.name, block=False
+                )
+            except MemoryPressureError:
+                with self._lock:
+                    pinned = img.name in self._pinned
+                if pinned:
+                    # an unrecoverable base that does not fit must fail
+                    # LOUDLY at attach time — silently dropping it would
+                    # crash every later restore deduplicated against it
+                    raise
+                self._drop(img.name)
+                continue
+            region.commit()
+            with self._lock:
+                self._regions[img.name] = region
+        memory.register_reclaimer("image-cache", self.reclaim, self.RECLAIM_ORDER)
+
+    def put(self, img: BaseImage, evictable: bool = True) -> None:
+        """Install an image.  ``evictable=False`` pins it against the
+        *pressure* reclaimer (a restore that deduplicated against an
+        in-memory-only base cannot recover it from disk); recoverable
+        images — bootstrapped parents with a JIF behind them — stay
+        evictable.  Capacity LRU is unaffected by the pin."""
+        region = None
+        if self._memory is not None:
+            # a same-name replacement only needs the DELTA: resize the
+            # resident image's region in place instead of double-charging
+            # the full size (which would run the ladder, or fail, for a
+            # net-zero operation)
+            with self._lock:
+                resident = self._regions.get(img.name)
+            if resident is not None and resident.resize(img.nbytes):
+                region = resident
+            else:
+                # reserve BEFORE taking the cache lock: admission may run
+                # the reclaim ladder, whose image-cache rung locks this
+                # cache.  A base that cannot fit even after reclaim fails
+                # fast here — the restore that needed it must not
+                # over-commit the node.
+                region = self._memory.reserve(
+                    img.nbytes, KIND_IMAGE_CACHE, owner=img.name
+                )
+            region.commit()
+        evicted = []
         with self._lock:
             old = self._images.get(img.name)
             if old is not None:
                 self.total_bytes -= old.nbytes
+                old_region = self._regions.pop(img.name, None)
+                if old_region is not None and old_region is not region:
+                    evicted.append(old_region)
             self._images[img.name] = img
             self.total_bytes += img.nbytes
+            if region is not None:
+                self._regions[img.name] = region
+            if evictable:
+                self._pinned.discard(img.name)
+            else:
+                self._pinned.add(img.name)
             self._images.move_to_end(img.name)
-            self._evict()
+            evicted.extend(self._evict())
+        for r in evicted:
+            r.release()
 
     def get(self, name: Optional[str]) -> Optional[BaseImage]:
         if name is None:
@@ -126,8 +207,56 @@ class NodeImageCache:
         with self._lock:
             self.stats["base_bytes_served"] += nbytes
 
-    def _evict(self):
-        while self.total_bytes > self.capacity and len(self._images) > 1:
-            _, img = self._images.popitem(last=False)
+    def _drop(self, name: str) -> int:
+        """Remove one image (no region bookkeeping); returns its bytes."""
+        with self._lock:
+            img = self._images.pop(name, None)
+            if img is None:
+                return 0
+            self._pinned.discard(name)
             self.total_bytes -= img.nbytes
             self.stats["evictions"] += 1
+            return img.nbytes
+
+    def _evict(self):
+        """Capacity LRU (under self._lock).  Pinned images are skipped —
+        an unrecoverable base evicted for capacity would crash every
+        restore deduplicated against it.  Returns regions to release once
+        the lock is dropped (region release takes the manager lock; lock
+        order is always cache -> manager)."""
+        released = []
+        victims = [n for n in self._images if n not in self._pinned]
+        while (
+            self.total_bytes > self.capacity and len(self._images) > 1 and victims
+        ):
+            name = victims.pop(0)
+            img = self._images.pop(name)
+            self.total_bytes -= img.nbytes
+            self.stats["evictions"] += 1
+            region = self._regions.pop(name, None)
+            if region is not None:
+                released.append(region)
+        return released
+
+    def reclaim(self, nbytes: int, protect=frozenset()) -> int:
+        """Ladder rung 1: evict LRU *recoverable* images until ``nbytes``
+        are freed (may drain them all — a restore mid-flight keeps its own
+        reference to the base it resolved, and the next miss bootstraps the
+        parent back from its JIF).  Pinned images (no disk backing) are
+        never sacrificed here.  Returns the bytes uncharged."""
+        freed = 0
+        released = []
+        with self._lock:
+            for name in [n for n in self._images if n not in self._pinned]:
+                if freed >= nbytes:
+                    break
+                img = self._images.pop(name)
+                self.total_bytes -= img.nbytes
+                self.stats["evictions"] += 1
+                freed += img.nbytes
+                region = self._regions.pop(name, None)
+                if region is not None:
+                    released.append(region)
+        for r in released:
+            r.release()
+        return freed

@@ -49,13 +49,20 @@ class IOStream:
         name: str,
         priority: int = 0,
         on_complete: Optional[Callable[[], None]] = None,
+        region=None,
     ):
         self.sched = sched
         self.name = name
         self.priority = priority
+        # optional ledger region (repro.core.memory.MemoryRegion): storage
+        # bytes this stream reads are recorded as in-flight fill against
+        # it, so the node's memory ledger sees prefetch progress live.  The
+        # restorer swaps it for the residual region at the ws boundary.
+        self.region = region
         self._jobs: Deque[_TensorJob] = deque()
         self._by_name: Dict[str, _TensorJob] = {}
         self._sealed = False
+        self._active = 0  # ops/finalizes running outside the lock right now
         self._completed = False
         self._on_complete = on_complete
         self._done = threading.Event()
@@ -75,10 +82,13 @@ class IOStream:
             self.sched._cv.notify_all()
 
     def seal(self) -> None:
-        """No more submissions; the stream completes when the queue drains."""
+        """No more submissions; the stream completes when the queue drains.
+        A stream sealed with an empty queue (every tensor was served from
+        pinned memory) completes immediately."""
         with self.sched._cv:
             self._sealed = True
             self.sched._cv.notify_all()
+        self.sched._maybe_complete(self)
 
     def boost(self, tensor_name: str) -> bool:
         """Demand-promote one tensor's pending I/O (see module docstring)."""
@@ -141,10 +151,14 @@ class PrefetchIOScheduler:
         priority: int = 0,
         on_complete: Optional[Callable[[], None]] = None,
         inline: bool = False,
+        region=None,
     ) -> IOStream:
         """``inline`` streams are never served by the reader thread — the
-        caller drains them synchronously via :meth:`drain_inline`."""
-        stream = IOStream(self, name, priority=priority, on_complete=on_complete)
+        caller drains them synchronously via :meth:`drain_inline`.
+        ``region`` (optional ledger region) receives in-flight I/O
+        accounting for every storage byte this stream reads."""
+        stream = IOStream(self, name, priority=priority, on_complete=on_complete,
+                          region=region)
         with self._cv:
             if self._shutdown:
                 raise RuntimeError("scheduler is shut down")
@@ -227,6 +241,9 @@ class PrefetchIOScheduler:
         t0 = time.perf_counter()
         nbytes = int(op() or 0)
         dt = time.perf_counter() - t0
+        region = stream.region
+        if region is not None and nbytes:
+            region.note_io(nbytes)
         with self._cv:
             stream.stats["io_ops"] += 1
             stream.stats["bytes_read"] += nbytes
@@ -236,7 +253,14 @@ class PrefetchIOScheduler:
 
     def _maybe_complete(self, stream: IOStream) -> None:
         with self._cv:
-            if stream._completed or not stream._sealed or stream._jobs:
+            # _active guards the window where the reader popped the last
+            # job but its op/finalize is still executing outside the lock:
+            # completing then would commit regions and close the JifReader
+            # under a finalize that is still installing the tensor
+            if (
+                stream._completed or not stream._sealed
+                or stream._jobs or stream._active
+            ):
                 return
             stream._completed = True
             if stream in self._streams:
@@ -278,16 +302,27 @@ class PrefetchIOScheduler:
                     stream._jobs.popleft()
                     stream._by_name.pop(job.name, None)
                     finalize = job.finalize
+                stream._active += 1  # completion must wait for this work
             # a failing op/finalize fails ITS stream only; the shared
             # reader must survive to serve every other tenant
+            error = None
             try:
                 if op is not None:
                     self._run_op(stream, op)
-                    continue
-                if finalize is not None:
+                elif finalize is not None:
                     finalize()
             except BaseException as exc:  # noqa: BLE001
-                self._fail_stream(stream, exc)
+                error = exc
+            finally:
+                with self._cv:
+                    stream._active -= 1
+            if error is not None:
+                self._fail_stream(stream, error)
+                continue
+            if op is not None:
+                # a concurrent abort may have emptied the stream while this
+                # op ran; its _fail_stream deferred completion to us
+                self._maybe_complete(stream)
                 continue
             with self._cv:
                 stream.stats["tensors"] += 1

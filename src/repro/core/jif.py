@@ -185,19 +185,23 @@ class JifReader:
     def __init__(self, path: str):
         self.path = path
         self._f = open(path, "rb")
-        magic = self._f.read(4)
-        if magic != MAGIC:
-            raise ValueError(f"{path}: not a JIF file")
-        hlen = int.from_bytes(self._f.read(4), "little")
-        self.header = msgpack.unpackb(self._f.read(hlen), raw=False)
-        self.version: int = self.header.get("version", 1)
-        self.page_size: int = self.header["page_size"]
-        self.meta: Dict = self.header["meta"]
-        self.base_ref = self.header.get("base")
-        self.data_off: int = self.header["data_off"]
-        self.data_len: int = self.header["data_len"]
-        self.tensors = [TensorEntry.from_header(d) for d in self.header["tensors"]]
-        self.by_name = {t.name: t for t in self.tensors}
+        try:
+            magic = self._f.read(4)
+            if magic != MAGIC:
+                raise ValueError(f"{path}: not a JIF file")
+            hlen = int.from_bytes(self._f.read(4), "little")
+            self.header = msgpack.unpackb(self._f.read(hlen), raw=False)
+            self.version: int = self.header.get("version", 1)
+            self.page_size: int = self.header["page_size"]
+            self.meta: Dict = self.header["meta"]
+            self.base_ref = self.header.get("base")
+            self.data_off: int = self.header["data_off"]
+            self.data_len: int = self.header["data_len"]
+            self.tensors = [TensorEntry.from_header(d) for d in self.header["tensors"]]
+            self.by_name = {t.name: t for t in self.tensors}
+        except BaseException:
+            self._f.close()  # a corrupt image must not leak the fd to GC
+            raise
         self._itables: Dict[str, IntervalTable] = {}
 
     @property

@@ -134,10 +134,15 @@ class SnapshotPipeline:
         page_size: int = overlay.DEFAULT_PAGE,
         trim_fn: Optional[Callable] = None,
         node_cache=None,
+        memory=None,
     ):
         self.page_size = page_size
         self.trim_fn = trim_fn
         self.node_cache = node_cache  # used to materialize v1 parents once
+        # optional node ledger (repro.core.memory.NodeMemoryManager): the
+        # writer's classification buffers are charged as scratch for the
+        # duration of run(), so snapshot writes compete with live tenants
+        self.memory = memory
 
     # ------------------------------------------------------------- stage 1
     def trim(self, state):
@@ -287,6 +292,26 @@ class SnapshotPipeline:
 
         t0 = time.perf_counter()
         state = self.trim(state)
+
+        scratch = None
+        if self.memory is not None:
+            from repro.core.memory import KIND_SCRATCH
+
+            nbytes = sum(
+                getattr(arr, "nbytes", 0) for _, arr in flatten_state(state)[0]
+            )
+            scratch = self.memory.reserve(
+                nbytes, KIND_SCRATCH, owner=f"snapshot:{os.path.basename(path)}"
+            )
+        try:
+            return self._run(state, path, base, parent, access_order,
+                             working_set, meta, t0)
+        finally:
+            if scratch is not None:
+                scratch.release()
+
+    def _run(self, state, path, base, parent, access_order, working_set,
+             meta, t0) -> SnapshotStats:
 
         digest_source = base
         base_ref = {"name": base.name} if base is not None else None

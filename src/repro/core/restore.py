@@ -31,6 +31,12 @@ from repro.core import overlay
 from repro.core.cache import BaseImage, NodeImageCache
 from repro.core.iosched import IOStream, PrefetchIOScheduler
 from repro.core.jif import JifReader
+from repro.core.memory import (
+    KIND_RESIDUAL,
+    KIND_WORKING_SET,
+    MemoryRegion,
+    NodeMemoryManager,
+)
 from repro.core.pool import BufferPool
 from repro.core.treeutil import unflatten_state
 
@@ -51,6 +57,9 @@ class RestoreStats:
     image_bytes: int = 0      # logical bytes of the restored state tree
     ws_tensors: int = 0       # tensors inside the traced working set
     residual_tensors: int = 0  # tensors streaming after the ws boundary
+    reused_bytes: int = 0     # bytes served from a pinned working set
+    reused_tensors: int = 0   # tensors served from a pinned working set
+    ws_names: Optional[List[str]] = None  # traced working-set tensor names
 
     # Snapshot consistency: the prefetcher mutates counters concurrently
     # with readers (the engine reports stats while the stream is live), so
@@ -101,6 +110,7 @@ class RestoreStats:
     def as_dict(self):
         with self._lock:
             d = dataclasses.asdict(self)
+        d.pop("ws_names", None)  # bulky name list; read the attribute instead
         d["complete"] = self.complete
         d["ws_ready"] = self.ws_ready
         return d
@@ -162,13 +172,18 @@ class SpiceRestorer:
         simulate_read_bw: Optional[float] = None,
         iosched: Optional[PrefetchIOScheduler] = None,
         stream_priority: int = 0,
+        memory: Optional[NodeMemoryManager] = None,
     ):
         """``transform`` runs on the scheduler's reader thread per completed
         tensor (e.g. jnp.asarray = eager device install, off the critical
         path).  ``simulate_read_bw`` (bytes/s) sleeps during reads to model
         real storage latency when files are page-cache resident (labeled
         runs only).  ``iosched`` is the node-shared prefetch scheduler; when
-        omitted a private one is created per restorer (standalone use)."""
+        omitted a private one is created per restorer (standalone use).
+        ``memory`` is the node ledger: when given, a restore reserves its
+        working-set and residual regions up front — a restore that cannot
+        fit fails fast (or triggers the reclaim ladder) instead of
+        over-committing the node."""
         self.pool = pool or BufferPool()
         self.node_cache = node_cache or NodeImageCache()
         self.io_chunk_bytes = io_chunk_bytes
@@ -177,6 +192,11 @@ class SpiceRestorer:
         self.simulate_read_bw = simulate_read_bw
         self.iosched = iosched or PrefetchIOScheduler(name="spice-private")
         self.stream_priority = stream_priority
+        self.memory = memory
+        # (ws_region, residual_region) of the LAST restore() call — the
+        # node scheduler transfers these onto the FunctionInstance, which
+        # releases them on eviction (restorers are per-restore on that path)
+        self.regions: Tuple[Optional[MemoryRegion], Optional[MemoryRegion]] = (None, None)
 
     # ------------------------------------------------------------------
     def restore(
@@ -185,6 +205,8 @@ class SpiceRestorer:
         on_ready: Optional[Callable[[str, np.ndarray], None]] = None,
         wait: bool = True,
         on_working_set: Optional[Callable[[], None]] = None,
+        preloaded: Optional[Dict[str, Any]] = None,
+        preloaded_region: Optional[MemoryRegion] = None,
     ) -> Tuple[Any, Dict, Dict[str, TensorHandle], RestoreStats]:
         """Returns (state, meta, handles, stats). With ``wait=False`` the
         state tree contains TensorHandles being filled by the scheduler —
@@ -196,26 +218,128 @@ class SpiceRestorer:
         the residual keeps streaming at background priority — demand boosts
         still promote individual residual tensors on ``TensorHandle.wait``.
         The JIF reader is closed (and ``stats`` marked complete) when the
-        last tensor finalizes, whether or not the caller waited."""
+        last tensor finalizes, whether or not the caller waited.
+
+        ``preloaded`` maps tensor names to already-resident arrays (a
+        residual-evicted instance's pinned working set): matching tensors
+        are served without any storage read, so a re-restore reads only the
+        bytes that were actually dropped.  Entries whose dtype/shape no
+        longer match the image (e.g. after a relayout) fall back to a
+        normal read.  ``preloaded_region`` is the ledger region still
+        charging those resident bytes — it is resized in place into this
+        restore's working-set region (ownership transfers here; the caller
+        must not release it afterwards)."""
         stats = RestoreStats()
         t0 = time.perf_counter()
-        r = JifReader(path)
-        r.load_all_itables()
-        meta = r.meta
-        base = self._resolve_base(r)
+        r = None
+        try:
+            r = JifReader(path)  # missing/corrupt image raises here
+            r.load_all_itables()
+            meta = r.meta
+            base = self._resolve_base(r)
+        except BaseException:
+            # _resolve_base closes r on its own failure paths, but a parent
+            # bootstrap can also fail through node_cache.put (e.g.
+            # MemoryPressureError) — close() is idempotent, never leak the
+            # fd (nor the caller's retained ws charge)
+            if preloaded_region is not None:
+                preloaded_region.release()
+            if r is not None:
+                r.close()
+            raise
+
+        order = meta["access_order"]
+        ws_names = set(meta.get("working_set") or order)
+        reused: Dict[str, Any] = {}
+        for t in r.tensors:
+            arr = (preloaded or {}).get(t.name)
+            if (
+                arr is not None
+                and getattr(arr, "nbytes", -1) == t.nbytes
+                and tuple(getattr(arr, "shape", ())) == tuple(t.shape)
+                and str(getattr(arr, "dtype", "")) == t.dtype
+            ):
+                reused[t.name] = arr
+
+        # ---- admission: reserve regions BEFORE any data is staged --------
+        region_ws = region_res = None
+        if self.memory is not None:
+            ws_bytes = sum(t.nbytes for t in r.tensors if t.name in ws_names)
+            res_bytes = sum(t.nbytes for t in r.tensors) - ws_bytes
+            tag = os.path.basename(path)
+            try:
+                if (
+                    preloaded_region is not None
+                    and not preloaded_region.released
+                    and preloaded_region.resize(ws_bytes)
+                ):
+                    # re-restore: the pinned working set's charge carries
+                    # over in place — the resident bytes are never
+                    # uncharged, so concurrent reserves cannot admit
+                    # against memory that is still physically held
+                    region_ws = preloaded_region
+                else:
+                    if preloaded_region is not None:
+                        # ws size changed (relayout): release the stale pin
+                        # first so the fresh reserve does not stack on top
+                        # of a charge the ladder has no way to reclaim
+                        preloaded_region.release()
+                    region_ws = self.memory.reserve(
+                        ws_bytes, KIND_WORKING_SET, owner=tag
+                    )
+                if res_bytes:
+                    region_res = self.memory.reserve(
+                        res_bytes, KIND_RESIDUAL, owner=tag
+                    )
+            except BaseException:
+                if region_ws is not None:
+                    region_ws.release()
+                r.close()
+                raise
+        elif preloaded_region is not None:
+            preloaded_region.release()  # no ledger on this restorer
+        self.regions = (region_ws, region_res)
+
+        def _release_regions():
+            for reg in (region_ws, region_res):
+                if reg is not None:
+                    reg.release()
 
         handles: Dict[str, TensorHandle] = {}
         buffers: Dict[str, np.ndarray] = {}
-        order = meta["access_order"]
-        for t in r.tensors:
-            handles[t.name] = TensorHandle(t.name, t.shape, t.dtype)
-            buffers[t.name] = self.pool.acquire(t.nbytes)
-        ws_names = set(meta.get("working_set") or order)
-        ws_remaining = [sum(1 for t in r.tensors if t.name in ws_names)]
-        stats.image_bytes = sum(t.nbytes for t in r.tensors)
-        stats.ws_tensors = ws_remaining[0]
-        stats.residual_tensors = len(r.tensors) - ws_remaining[0]
-        stats.metadata_s = time.perf_counter() - t0
+        # anything that fails between here and the stream owning its
+        # on_complete (pool allocation, a shut-down scheduler) must return
+        # the admitted charges and close the reader — a leaked reservation
+        # would brick every later admission on the node
+        try:
+            for t in r.tensors:
+                handles[t.name] = TensorHandle(t.name, t.shape, t.dtype)
+                if t.name not in reused:
+                    buffers[t.name] = self.pool.acquire(t.nbytes)
+            ws_remaining = [sum(
+                1 for t in r.tensors if t.name in ws_names and t.name not in reused
+            )]
+            stats.image_bytes = sum(t.nbytes for t in r.tensors)
+            stats.ws_tensors = sum(1 for t in r.tensors if t.name in ws_names)
+            stats.residual_tensors = len(r.tensors) - stats.ws_tensors
+            stats.ws_names = [n for n in order if n in ws_names]
+            stats.metadata_s = time.perf_counter() - t0
+
+            # pinned tensors are resident already: serve them with zero I/O
+            for t in r.tensors:
+                if t.name not in reused:
+                    continue
+                handles[t.name].set(reused[t.name])
+                stats.add(reused_bytes=t.nbytes, reused_tensors=1)
+                region = region_ws if t.name in ws_names else region_res
+                if region is not None:
+                    region.populate(t.nbytes)
+            if reused:
+                stats.set_once("first_tensor_s", time.perf_counter() - t0)
+        except BaseException:
+            _release_regions()
+            r.close()
+            raise
 
         def finalize(name: str):
             t = r.by_name[name]
@@ -228,6 +352,9 @@ class SpiceRestorer:
                 # allocation and zeroing stay off future critical paths
                 self.pool.release(buffers.pop(name), dirty=True)
             handles[name].set(arr)
+            region = region_ws if name in ws_names else region_res
+            if region is not None:
+                region.populate(t.nbytes)
             stats.set_once("first_tensor_s", time.perf_counter() - t0)
             if on_ready is not None:
                 on_ready(name, arr)
@@ -236,10 +363,13 @@ class SpiceRestorer:
                 # only ever moves on the serving thread
                 ws_remaining[0] -= 1
                 if ws_remaining[0] == 0 and not stats.ws_ready:
+                    if region_ws is not None:
+                        region_ws.commit(pinned="working_set")
                     stats.mark_working_set(time.perf_counter() - t0)
                     # phase 2: residual streams on at background priority;
                     # per-tensor demand boosts still overtake it
                     stream.set_priority(BACKGROUND_PRIORITY)
+                    stream.region = region_res  # residual I/O accounting
                     if on_working_set is not None:
                         on_working_set()
 
@@ -288,23 +418,49 @@ class SpiceRestorer:
                     done += n
             return ops
 
-        stream = self.iosched.open_stream(
-            name=os.path.basename(path),
-            priority=self.stream_priority,
-            inline=not self.pipelined,
-        )
+        try:
+            stream = self.iosched.open_stream(
+                name=os.path.basename(path),
+                priority=self.stream_priority,
+                inline=not self.pipelined,
+                region=region_ws,
+            )
+        except BaseException:
+            _release_regions()
+            r.close()
+            raise
 
         def on_complete():
             if stream.error is not None:
-                # failed stream: release every waiter with the error
+                # failed stream: release every waiter with the error, and
+                # return the admitted regions to the budget (idempotent —
+                # an instance that already adopted them releases too)
                 for h in handles.values():
                     h.fail(stream.error)
+                _release_regions()
+            else:
+                if region_ws is not None:
+                    region_ws.commit(pinned="working_set")
+                if region_res is not None:
+                    region_res.commit(pinned="residual")
             stats.mark_complete(time.perf_counter() - t0)
             r.close()
 
         stream._on_complete = on_complete
         try:
+            if ws_remaining[0] == 0 and not stats.ws_ready:
+                # the whole working set was served from pinned memory:
+                # promote immediately; the stream only reads residual now
+                if region_ws is not None:
+                    region_ws.commit(pinned="working_set")
+                stats.mark_working_set(time.perf_counter() - t0)
+                stream.set_priority(BACKGROUND_PRIORITY)
+                stream.region = region_res
+                if on_working_set is not None:
+                    on_working_set()
             for name in order:
+                if name in reused:
+                    continue
                 stream.submit(name, tensor_ops(name), partial(finalize, name))
             stream.seal()
         except BaseException as exc:

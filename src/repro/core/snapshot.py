@@ -26,9 +26,11 @@ def snapshot(
     meta: Optional[Dict[str, Any]] = None,
     trim_fn: Optional[Callable] = None,
     node_cache=None,
+    memory=None,
 ) -> SnapshotStats:
     return SnapshotPipeline(
-        page_size=page_size, trim_fn=trim_fn, node_cache=node_cache
+        page_size=page_size, trim_fn=trim_fn, node_cache=node_cache,
+        memory=memory,
     ).run(
         state,
         path,

@@ -88,13 +88,20 @@ class ServerlessNode:
         return self._sched.iosched
 
     @property
+    def memory(self):
+        """The node's memory ledger (:class:`NodeMemoryManager`)."""
+        return self._sched.memory
+
+    @property
     def pool(self) -> BufferPool:
         return self._sched.pool
 
     @pool.setter
     def pool(self, new_pool: BufferPool) -> None:
         self._sched.pool = new_pool
-        self._sched.memory_budget = new_pool.capacity
+        # a zero-capacity pool means "no pooling", not "no memory": leave
+        # the ledger unlimited rather than refusing every restore
+        self._sched.memory_budget = new_pool.capacity or None
 
     def publish(self, *args, **kwargs):
         return self._sched.publish(*args, **kwargs)

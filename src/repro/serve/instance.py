@@ -193,7 +193,8 @@ class InstanceState(enum.Enum):
     RESTORING = "restoring"
     WARMING = "warming"  # working set resident; residual streaming in
     WARM = "warm"
-    EVICTED = "evicted"
+    EVICTED = "evicted"  # may keep a pinned working set (residual evicted):
+    # the next restore then reads ONLY the residual bytes it dropped
 
 
 class FunctionInstance:
@@ -219,9 +220,17 @@ class FunctionInstance:
         self.memory_bytes = 0
         self.inflight = 0
         self.ws_ready = False    # working set resident (WARMING/WARM)
+        # ledger regions adopted from the restorer (repro.core.memory):
+        # ws_region charges the pinned working set, residual_region the
+        # post-boundary tail.  Released on eviction; residual eviction
+        # releases only residual_region and pins the ws leaves.
+        self.ws_region = None
+        self.residual_region = None
+        self.ws_pinned: Optional[Dict[str, Any]] = None
         self.counters = {
             "cold_starts": 0, "warm_hits": 0, "joined": 0,
             "ttl_evictions": 0, "lru_evictions": 0, "ws_promotions": 0,
+            "residual_evictions": 0, "ws_rerestores": 0,
         }
 
     # ------------------------------------------------------------ queries
@@ -248,7 +257,23 @@ class FunctionInstance:
         self.ws_ready = False
         self.warm_expiry = 0.0
         self.memory_bytes = 0
+        self.ws_pinned = None
+        for region in (self.ws_region, self.residual_region):
+            if region is not None:
+                region.release()
+        self.ws_region = None
+        self.residual_region = None
         self.cond.notify_all()
+
+    def adopt_regions(self, ws_region, residual_region) -> None:
+        """Take ownership of the restore's ledger regions: from here on the
+        instance lifecycle (evict / residual-evict / clear) releases them."""
+        for stale in (self.ws_region, self.residual_region):
+            if stale is not None:
+                stale.release()
+        self.ws_region = ws_region
+        self.residual_region = residual_region
+
     def begin_restore(self, mode: str) -> int:
         assert self.state in (InstanceState.COLD, InstanceState.EVICTED), self.state
         self.state = InstanceState.RESTORING
@@ -260,11 +285,12 @@ class FunctionInstance:
         self.counters["cold_starts"] += 1
         return self.generation
 
-    def publish_restore(self, tree, getter, stats) -> None:
+    def publish_restore(self, tree, getter, stats, regions=(None, None)) -> None:
         assert self.state is InstanceState.RESTORING, self.state
         self.tree = tree
         self.getter = getter
         self.restore_stats = stats
+        self.adopt_regions(*regions)
         self.cond.notify_all()
 
     def promote_warming(self, ttl_s: float, now: float, est_bytes: int) -> None:
@@ -309,7 +335,12 @@ class FunctionInstance:
         self.cond.notify_all()
 
     def evict(self, reason: str = "manual") -> bool:
-        """WARM → EVICTED (idle instances only).  Returns True if evicted."""
+        """WARM → EVICTED (idle instances only).  Returns True if evicted.
+        An EVICTED instance still holding a pinned working set drops it too
+        (full eviction — the next restore reads everything again)."""
+        if self.state is InstanceState.EVICTED and self.ws_pinned is not None:
+            self.drop_ws_pinned()
+            return False  # state unchanged; only the pin was dropped
         if self.state is not InstanceState.WARM or not self.idle:
             return False  # WARMING is never evictable: its residual stream
             # is still in flight and would write into freed buffers
@@ -319,6 +350,79 @@ class FunctionInstance:
         elif reason == "lru":
             self.counters["lru_evictions"] += 1
         return True
+
+    def evict_residual(self) -> int:
+        """WARM → EVICTED keeping the working set pinned (the reclaim
+        ladder's cheapest rung): only the residual region is released, the
+        ws leaves stay resident so the next restore — the EVICTED →
+        RESTORING re-restore path — reads only the residual bytes it
+        dropped here.  Returns the bytes freed (0 if not applicable)."""
+        from repro.core.treeutil import flatten_state
+
+        if (
+            self.state is not InstanceState.WARM
+            or not self.idle
+            or self.residual_region is None
+            or self.restore_stats is None
+            or not self.restore_stats.ws_names
+        ):
+            return 0
+        ws_names = set(self.restore_stats.ws_names)
+        keep: Dict[str, Any] = {}
+        try:
+            leaves, _ = flatten_state(self.tree)
+        except Exception:
+            return 0  # unflattenable tree (shouldn't happen for WARM)
+        for name, arr in leaves:
+            if name in ws_names:
+                keep[name] = arr
+        freed = self.residual_region.nbytes
+        self.residual_region.release()
+        self.residual_region = None
+        self.state = InstanceState.EVICTED
+        self.tree = None
+        self.getter = None
+        self.ws_ready = False
+        self.warm_expiry = 0.0
+        self.ws_pinned = keep
+        self.memory_bytes = (
+            self.ws_region.nbytes if self.ws_region is not None
+            else sum(getattr(a, "nbytes", 0) for a in keep.values())
+        )
+        self.counters["residual_evictions"] += 1
+        self.cond.notify_all()
+        return freed
+
+    def drop_ws_pinned(self) -> int:
+        """Release an EVICTED instance's pinned working set (the warm-LRU
+        ladder rung).  Returns the bytes freed."""
+        if self.ws_pinned is None:
+            return 0
+        freed = (
+            self.ws_region.nbytes if self.ws_region is not None
+            else sum(getattr(a, "nbytes", 0) for a in self.ws_pinned.values())
+        )
+        if self.ws_region is not None:
+            self.ws_region.release()
+        self.ws_region = None
+        self.ws_pinned = None
+        self.memory_bytes = 0
+        self.cond.notify_all()
+        return freed
+
+    def take_ws_pinned(self):
+        """Hand the pinned working set to the owner of a fresh restore.
+        Returns (pinned dict or None, ws_region or None); the caller passes
+        the dict as ``preloaded`` and the region as ``preloaded_region`` —
+        the restorer resizes the region in place into the new ws region
+        (ownership transfers there; do NOT release it separately), so the
+        resident bytes stay charged across the re-restore."""
+        pinned, region = self.ws_pinned, self.ws_region
+        self.ws_pinned = None
+        self.ws_region = None
+        if pinned:
+            self.counters["ws_rerestores"] += 1
+        return pinned, region
 
     def abort_warming(self) -> None:
         """WARMING → EVICTED when residual finalization failed."""

@@ -9,8 +9,10 @@ The serving stack is layered (bottom up):
   restore handles and generation state.
 * ``repro.serve.node``     — this module: admits concurrent invocations
   through a thread pool, routes them warm / joined / cold, enforces
-  keep-alive TTLs and LRU eviction under a node memory budget shared with
-  the :class:`BufferPool`, and carries the offline publish path.
+  keep-alive TTLs, and drives the pressure reclaim ladder (residual tails
+  → cached base images → LRU warm state) over the node's single memory
+  ledger (:class:`repro.core.memory.NodeMemoryManager`); also carries the
+  offline publish path.
 
 Invocations of a function whose restore is already in flight *join* that
 restore (generate over the same tracked-handle tree) rather than re-reading
@@ -40,6 +42,11 @@ from repro.core import (
     snapshot,
 )
 from repro.core import baselines
+from repro.core.memory import (
+    KIND_WORKING_SET,
+    MemoryPressureError,
+    NodeMemoryManager,
+)
 from repro.core.restore import RestoreStats
 from repro.core.snapshot import SnapshotStats
 from repro.core.trace import AccessRecorder, trace_access_order
@@ -48,6 +55,7 @@ from repro.serve.instance import (
     FunctionInstance,
     InstanceState,
     _FaasnapLeaf,
+    _tree_bytes as _tree_nbytes,
     faasnap_wait,
     generate,
     layerwise_state,
@@ -114,17 +122,30 @@ class NodeScheduler:
         max_workers: int = 8,
         memory_budget_bytes: Optional[int] = None,
         keepalive: Optional[KeepAlivePolicy] = None,
+        memory: Optional[NodeMemoryManager] = None,
     ):
         self.registry = registry or FunctionRegistry()
         self.node_cache = node_cache or NodeImageCache()
-        self.pool = pool or BufferPool()
+        self._pool = pool or BufferPool()
         self.iosched = iosched or PrefetchIOScheduler(name="node-iosched")
         self.keepalive = keepalive or KeepAlivePolicy()
-        # warm-instance memory competes with pool staging buffers for the
-        # same host RAM: one budget covers both
-        self.memory_budget = (
-            memory_budget_bytes if memory_budget_bytes is not None else self.pool.capacity
+        # ONE ledger covers everything competing for node RAM: pool staging
+        # buffers, cached base images, warm working sets, residual tails,
+        # snapshot scratch.  The budget is an invariant of the manager, not
+        # an estimate summed across subsystems.
+        budget = (
+            memory_budget_bytes if memory_budget_bytes is not None else self._pool.capacity
         )
+        self.memory = memory or NodeMemoryManager(budget)
+        self._pool.attach(self.memory)
+        self.node_cache.attach(self.memory)  # registers ladder rung 1
+        # reclaim ladder: residual tails first (cheapest to re-restore),
+        # then recoverable base images (rung 1, above), then idle pool
+        # staging (pure perf cache — without this rung the free list's
+        # charge would ratchet up unreclaimably), then LRU warm instances
+        self.memory.register_reclaimer("residual", self._reclaim_residual, order=0)
+        self.memory.register_reclaimer("pool", self._reclaim_pool, order=2)
+        self.memory.register_reclaimer("warm-lru", self._reclaim_warm_lru, order=3)
         self._instances: Dict[str, FunctionInstance] = {}
         self._ilock = threading.Lock()
         self._slock = threading.Lock()
@@ -145,11 +166,35 @@ class NodeScheduler:
             "lru_evictions": 0,
             "ws_promotions": 0,
             "relayouts": 0,
+            "residual_evictions": 0,
+            "ws_rerestores": 0,
         }
 
     def _bump(self, key: str, n: int = 1) -> None:
         with self._slock:
             self.stats[key] += n
+
+    # ------------------------------------------------------- memory ledger
+    @property
+    def pool(self) -> BufferPool:
+        return self._pool
+
+    @pool.setter
+    def pool(self, new_pool: BufferPool) -> None:
+        """Swap the staging pool (benchmarks do this between runs): the old
+        pool's ledger charge is released, the new pool is attached."""
+        old, self._pool = self._pool, new_pool
+        if old is not None and old is not new_pool:
+            old.detach()
+        new_pool.attach(self.memory)
+
+    @property
+    def memory_budget(self) -> Optional[int]:
+        return self.memory.budget
+
+    @memory_budget.setter
+    def memory_budget(self, nbytes: Optional[int]) -> None:
+        self.memory.budget = nbytes
 
     # -------------------------------------------------------------- publish
     def publish(
@@ -190,6 +235,9 @@ class NodeScheduler:
                 # in the JIF it streams as residual behind the ws boundary
                 full_state = dict(state)
                 full_state["__extra__"] = extra_state
+            # memory=: the writer's materialized copy is node memory too —
+            # the pipeline charges it as scratch so publish competes with
+            # live tenants honestly
             snapshot(
                 full_state,
                 jif_path,
@@ -197,6 +245,7 @@ class NodeScheduler:
                 access_order=order,
                 working_set=touched,
                 meta={"arch": cfg.name, "function": name},
+                memory=self.memory,
             )
         if "criu" in formats:
             baselines.criu_star_snapshot(state, f"{dirpath}/{name}.criu")
@@ -242,8 +291,11 @@ class NodeScheduler:
         ).result()
 
     # ------------------------------------------------------------- eviction
-    def evict(self, fname: Optional[str] = None) -> None:
-        """Force-evict warm instances (all, or one) — manual reclamation."""
+    def evict(self, fname: Optional[str] = None, timeout: float = 30.0) -> None:
+        """Force-evict warm instances (all, or one) — manual reclamation.
+        A WARMING instance (residual still landing) is waited on until its
+        finalizer flips it WARM, so a manual evict really leaves a cold
+        slate instead of silently skipping the in-flight instance."""
         with self._ilock:
             insts = (
                 list(self._instances.values())
@@ -252,6 +304,10 @@ class NodeScheduler:
             )
         for inst in insts:
             with inst.cond:
+                inst.cond.wait_for(
+                    lambda: inst.state is not InstanceState.WARMING,
+                    timeout=timeout,
+                )
                 inst.evict("manual")
 
     def reap_expired(self, now: Optional[float] = None) -> int:
@@ -428,6 +484,7 @@ class NodeScheduler:
             access_order=order,
             working_set=order,
             meta={"arch": spec.arch, "function": fname, "relayout": True},
+            memory=self.memory,  # rewrite copy charged as scratch
         )
         self._bump("relayouts")
         return stats
@@ -453,6 +510,7 @@ class NodeScheduler:
         inst = self._get_instance(fname, spec, cfg)
         role = None
         tree = getter = None
+        preloaded = pinned_region = None
         with inst.cond:
             while role is None:
                 now = time.time()
@@ -477,6 +535,10 @@ class NodeScheduler:
                 else:  # COLD / EVICTED — this thread owns the restore
                     role = "owner"
                     inst.begin_restore(mode)
+                    # EVICTED → RESTORING with a pinned working set: hand
+                    # the resident ws to the restorer so only the dropped
+                    # residual bytes are read again
+                    preloaded, pinned_region = inst.take_ws_pinned()
                     inst.inflight += 1
 
         try:
@@ -502,11 +564,16 @@ class NodeScheduler:
             # must not strand the instance in RESTORING: abort releases
             # joiners and makes the next invocation restore afresh
             try:
-                state, stats, getter = self._cold_restore(
-                    spec, mode, simulate_read_bw
+                if preloaded:
+                    self._bump("ws_rerestores")
+                # pinned_region rides along: the spice restorer resizes it
+                # in place into the new ws region, so the resident pinned
+                # bytes stay charged across the re-restore
+                state, stats, getter, regions = self._cold_restore(
+                    spec, mode, simulate_read_bw, preloaded, pinned_region
                 )
                 with inst.cond:
-                    inst.publish_restore(state, getter, stats)
+                    inst.publish_restore(state, getter, stats, regions)
                 restore_wait = time.perf_counter() - t0  # sync restore part
                 toks, ttft = generate(cfg, getter, state, prompt, max_new_tokens)
                 ttl = self.keepalive.ttl_for(spec)
@@ -546,6 +613,7 @@ class NodeScheduler:
                 raise
             self._bump("cold_starts")
             if ttl > 0:
+                self._charge_warm_instance(inst)
                 self._enforce_budget(keep=fname)
             return InvokeResult(
                 toks, cold=True, mode=mode,
@@ -561,26 +629,106 @@ class NodeScheduler:
                 inst.cond.notify_all()
 
     def _enforce_budget(self, keep: Optional[str] = None) -> None:
-        """LRU-evict idle warm instances until warm state + pool staging
-        memory fit the node budget."""
+        """Bring the ledger back under budget: reap expired TTLs, then run
+        the reclaim ladder (residual → image cache → warm LRU) for exactly
+        the overshoot.  ``keep`` protects a just-promoted instance."""
         if self.memory_budget is None:
             return
         self.reap_expired()  # free expired TTLs before sacrificing LRU state
+        over = self.memory.over_budget()
+        if over > 0:
+            self.memory.reclaim(over, protect=frozenset((keep,)) if keep else None)
+
+    # ------------------------------------------------------- reclaim ladder
+    def evict_residual(self, fname: str) -> int:
+        """Drop one WARM instance's residual pages, pinning its working set
+        (manual trigger of ladder rung 0).  Returns the bytes freed."""
+        inst = self.instance(fname)
+        if inst is None:
+            return 0
+        with inst.cond:
+            freed = inst.evict_residual()
+        if freed:
+            self._bump("residual_evictions")
+        return freed
+
+    def _reclaim_residual(self, nbytes: int, protect=frozenset()) -> int:
+        """Ladder rung 0: drop residual tails of idle WARM instances (LRU
+        order).  Their working sets stay pinned, so the re-restore reads
+        only the bytes dropped here — the cheapest memory on the node."""
         with self._ilock:
             insts = list(self._instances.values())
+        freed = 0
+        for inst in sorted(insts, key=lambda i: i.last_used):
+            if freed >= nbytes:
+                break
+            if inst.spec.name in protect:
+                continue
+            with inst.cond:
+                got = inst.evict_residual()
+            if got:
+                freed += got
+                self._bump("residual_evictions")
+        return freed
+
+    def _reclaim_pool(self, nbytes: int, protect=frozenset()) -> int:
+        """Ladder rung 2: trim the pool's free staging buffers (the pool
+        may have been swapped since registration, so resolve it live)."""
+        return self._pool.reclaim(nbytes, protect)
+
+    def _reclaim_warm_lru(self, nbytes: int, protect=frozenset()) -> int:
+        """Ladder rung 3: first drop pinned working sets of residual-evicted
+        instances, then LRU-evict idle WARM instances (keep-alive policy
+        picks the order)."""
+        with self._ilock:
+            insts = list(self._instances.values())
+        freed = 0
+        pinned = [
+            i for i in insts
+            if i.ws_pinned is not None and i.spec.name not in protect
+        ]
+        for inst in sorted(pinned, key=lambda i: i.last_used):
+            if freed >= nbytes:
+                return freed
+            with inst.cond:
+                got = inst.drop_ws_pinned()
+            if got:
+                freed += got
+                self._bump("lru_evictions")
         warm = [
             i for i in insts
-            if i.state is InstanceState.WARM and i.idle and i.spec.name != keep
+            if i.state is InstanceState.WARM and i.idle
+            and i.spec.name not in protect
         ]
         for victim in self.keepalive.victims(warm, need_evict=len(warm)):
-            usage = self.warm_bytes() + self.pool.held_bytes
-            if usage <= self.memory_budget:
-                return
+            if freed >= nbytes:
+                break
             with victim.cond:
+                # count only what the ledger actually gets back (regions);
+                # an uncharged instance still gets evicted, but reporting
+                # its bytes as reclaimed would let reclaim() over-promise
+                got = sum(
+                    reg.nbytes
+                    for reg in (victim.ws_region, victim.residual_region)
+                    if reg is not None
+                )
                 if victim.evict("lru"):
+                    freed += got
                     self._bump("lru_evictions")
+        return freed
 
-    def _cold_restore(self, spec: FunctionSpec, mode: str, sim_bw=None):
+    def _cold_restore(self, spec: FunctionSpec, mode: str, sim_bw=None,
+                      preloaded=None, pinned_region=None):
+        """Returns (state, stats, getter, (ws_region, residual_region)).
+        Spice restores reserve their regions up front through the node
+        ledger — a restore that cannot fit fails fast (MemoryPressureError)
+        or triggers the reclaim ladder instead of over-committing.
+        ``pinned_region`` (a residual-evicted instance's retained ws
+        charge) transfers into the spice restore's ws region; baseline
+        modes re-read everything, so it is released here."""
+        if pinned_region is not None and mode not in ("spice", "spice_sync"):
+            pinned_region.release()
+            pinned_region = None
         # eager install: numpy -> device array on the prefetcher thread (the
         # PTE-install analogue), so execution never pays conversion copies.
         # MUST copy: on CPU jnp.asarray can alias the staging buffer, which
@@ -591,28 +739,36 @@ class NodeScheduler:
             restorer = SpiceRestorer(
                 pool=self.pool, node_cache=self.node_cache,
                 transform=install, simulate_read_bw=sim_bw,
-                iosched=self.iosched,
+                iosched=self.iosched, memory=self.memory,
             )
-            state, meta, handles, stats = restorer.restore(spec.jif_path, wait=False)
-            return state, stats, wait_tree
+            state, meta, handles, stats = restorer.restore(
+                spec.jif_path, wait=False, preloaded=preloaded,
+                preloaded_region=pinned_region,
+            )
+            return state, stats, wait_tree, restorer.regions
         if mode == "spice_sync":
             restorer = SpiceRestorer(
                 pool=self.pool, node_cache=self.node_cache, pipelined=False,
                 transform=install, simulate_read_bw=sim_bw,
-                iosched=self.iosched,
+                iosched=self.iosched, memory=self.memory,
             )
-            state, meta, handles, stats = restorer.restore(spec.jif_path, wait=True)
-            return state, stats, None
+            state, meta, handles, stats = restorer.restore(
+                spec.jif_path, wait=True, preloaded=preloaded,
+                preloaded_region=pinned_region,
+            )
+            return state, stats, None, restorer.regions
         if mode == "criu_star":
             state, stats = baselines.criu_star_restore(
                 spec.jif_path.replace(".jif", ".criu"), simulate_read_bw=sim_bw
             )
-            return jax.tree.map(install, state), stats, None
+            state = jax.tree.map(install, state)
+            return state, stats, None, (self._charge_baseline(spec, state), None)
         if mode == "reap_star":
             state, stats = baselines.reap_star_restore(
                 spec.jif_path.replace(".jif", ".mono"), simulate_read_bw=sim_bw
             )
-            return jax.tree.map(install, state), stats, None
+            state = jax.tree.map(install, state)
+            return state, stats, None, (self._charge_baseline(spec, state), None)
         if mode == "faasnap_star":
             r = baselines.FaasnapAsyncRestorer(
                 spec.jif_path.replace(".jif", ".mono"), simulate_read_bw=sim_bw
@@ -624,5 +780,49 @@ class NodeScheduler:
                 if not t["name"].startswith("__extra__/")
             }
             state = unflatten_state(r.r.header["tree"], leaves)
-            return state, r.stats, faasnap_wait
+            return state, r.stats, faasnap_wait, (None, None)
         raise ValueError(f"unknown restore mode {mode!r}")
+
+    def _charge_baseline(self, spec: FunctionSpec, state):
+        """Baseline restores bypass the spice admission path; charge their
+        resident bytes to the ledger anyway so eviction pressure sees them.
+        Best-effort: a baseline run on an over-subscribed node proceeds
+        uncharged (the measured systems never refused admission either)."""
+        try:
+            return self.memory.reserve(
+                _tree_nbytes(state), KIND_WORKING_SET,
+                owner=spec.name, timeout=5.0, protect=(spec.name,),
+            )
+        except MemoryPressureError:
+            return None
+
+    def _charge_warm_instance(self, inst: FunctionInstance) -> None:
+        """Post-promotion charge for instances that reached WARM without
+        ledger regions — baseline modes whose state only materialized at
+        promotion (faasnap's lazy fault-in tree).  Without this, their warm
+        residency would be invisible to budget pressure."""
+        with inst.cond:
+            if inst.state is not InstanceState.WARM or inst.ws_region is not None:
+                return
+            nbytes = inst.memory_bytes
+            generation = inst.generation
+            fname = inst.spec.name
+        if not nbytes:
+            return
+        try:
+            region = self.memory.reserve(
+                nbytes, KIND_WORKING_SET, owner=fname,
+                timeout=5.0, protect=(fname,),
+            )
+        except MemoryPressureError:
+            return  # best-effort, like _charge_baseline
+        region.commit(pinned="working_set")
+        with inst.cond:
+            if (
+                inst.state is InstanceState.WARM
+                and inst.ws_region is None
+                and inst.generation == generation
+            ):
+                inst.ws_region = region
+            else:  # evicted/re-restored while we reserved
+                region.release()
