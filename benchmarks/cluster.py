@@ -1,0 +1,246 @@
+"""Cluster scenario: M zipf-weighted functions over N nodes, comparing
+placement policies end to end.
+
+Each policy serves the same deterministic zipf request schedule against a
+fresh 3-node cluster (per-node iosched / pool / image cache / memory
+ledger), after a seeding pass that cold-starts every function once through
+the router.  Functions are published as DELTAS against one parent JIF on
+disk, so a node that cold-restores any function first bootstraps the parent
+through its own image cache (``BaseImage.from_jif``) — exactly the
+snapshot-locality trade-off the policies differ on:
+
+* ``locality_first`` (sticky) routes repeats to the warm node and joins
+  concurrent invocations of one function onto the in-flight restore;
+* ``round_robin`` / ``least_loaded`` re-place every request, so popular
+  functions cold-start (and re-pull the parent) on every node.
+
+Reported per policy: TTFT p50/p99, cold/warm/join counts, image-pull bytes
+(sum of every node's arbiter reads), and per-node ledger high-water marks;
+plus a concurrency check that a single-replica function incurs ZERO
+duplicate concurrent cold restores across the cluster.  The summary merges
+into ``BENCH_coldstart.json`` under the ``"cluster"`` key.
+"""
+from __future__ import annotations
+
+import dataclasses
+import os
+import tempfile
+
+import numpy as np
+
+from benchmarks.common import PROMPT
+
+# merged into BENCH_coldstart.json (written by benchmarks/run.py)
+BENCH_TARGET = "coldstart"
+SUMMARY_KEY = "cluster"
+SUMMARY: dict = {}
+
+N_NODES = 3
+N_FUNCTIONS = 5
+ZIPF_S = 1.2
+SIM_READ_BW = 2e8  # mid-tier NVMe: cold restores are visibly slower than warm
+
+
+def _smoke() -> bool:
+    return os.environ.get("BENCH_SMOKE", "") not in ("", "0")
+
+
+def _cfg():
+    from repro.configs import get_config
+
+    cfg = get_config("qwen1.5-0.5b").reduced()
+    if not _smoke():
+        cfg = dataclasses.replace(
+            cfg, pattern_reps=10, n_layers=10, d_model=256, d_ff=512, head_dim=32
+        )
+    return cfg
+
+
+def _publish_zoo(catalog, cfg, dirpath: str):
+    """One parent JIF + N_FUNCTIONS delta-published fine-tunes of it."""
+    import jax
+
+    from repro.core import snapshot
+    from repro.models import lm
+    from repro.serve.engine import layerwise_state
+
+    base_params = lm.init_params(cfg, jax.random.PRNGKey(7))
+    parent_path = f"{dirpath}/cluster-parent.jif"
+    snapshot(layerwise_state(cfg, base_params), parent_path)
+
+    fnames = []
+    for i in range(N_FUNCTIONS):
+        ft = dict(base_params)
+        ft["pattern"] = list(base_params["pattern"])
+        ft["final_norm"] = base_params["final_norm"] + 0.01 * (i + 1)
+        for pi in range(len(cfg.pattern)):
+            def bump(a, _i=i):
+                a = np.asarray(a)
+                if a.ndim >= 1 and a.shape[0] == cfg.pattern_reps:
+                    cut = int(cfg.pattern_reps * 0.7)
+                    a = a.copy()
+                    a[cut:] = a[cut:] * (1.0 + 0.02 * (_i + 1))
+                return a
+            ft["pattern"][pi] = jax.tree.map(bump, base_params["pattern"][pi])
+        fname = f"zfn-{i}"
+        catalog.publish(fname, cfg, ft, dirpath, parent=parent_path,
+                        warm_ttl_s=3600.0, formats=("jif",))
+        fnames.append(fname)
+    return fnames
+
+
+def _build_cluster(catalog, policy, scale_out=None):
+    from repro.serve.cluster import ClusterRouter
+    from repro.serve.node import FixedTTLPolicy, NodeScheduler
+
+    nodes = [
+        NodeScheduler(
+            registry=catalog.registry,
+            keepalive=FixedTTLPolicy(3600.0),
+            name=f"node{i}",
+        )
+        for i in range(N_NODES)
+    ]
+    return ClusterRouter(catalog, nodes, placement=policy,
+                         scale_out_queue_depth=scale_out)
+
+
+def _schedule(fnames, n_requests):
+    """Deterministic zipf-weighted request order (func 0 most popular)."""
+    w = 1.0 / np.arange(1, len(fnames) + 1) ** ZIPF_S
+    p = w / w.sum()
+    rng = np.random.default_rng(42)
+    return [fnames[i] for i in rng.choice(len(fnames), size=n_requests, p=p)]
+
+
+def _run_policy(catalog, cfg, policy, fnames, schedule, rows):
+    router = _build_cluster(catalog, policy)
+    tag = policy.name
+    # seeding pass (unmeasured): one cold start per function through the
+    # router — establishes the sticky replica for sticky policies and
+    # warms the shared jit compile cache
+    for f in fnames:
+        r = router.invoke(f, PROMPT, max_new_tokens=2, mode="spice", cfg=cfg,
+                          simulate_read_bw=SIM_READ_BW)
+        assert r.cold, f"seed of {f} expected cold"
+    router.drain_residual()
+
+    ttfts, results = [], []
+    for f in schedule:
+        r = router.invoke(f, PROMPT, max_new_tokens=2, mode="spice", cfg=cfg,
+                          simulate_read_bw=SIM_READ_BW)
+        ttfts.append(r.ttft_s)
+        results.append(r)
+    router.drain_residual()
+
+    # concurrency: evict one function cluster-wide, then a burst of joint
+    # invocations — sticky routing must yield exactly ONE real cold restore
+    # (the rest join it on the same node): zero duplicates cluster-wide
+    burst_fn = fnames[0]
+    router.evict(burst_fn)
+    futs = [
+        router.submit(burst_fn, PROMPT, max_new_tokens=2, mode="spice",
+                      cfg=cfg, simulate_read_bw=SIM_READ_BW)
+        for _ in range(4)
+    ]
+    burst = [f.result() for f in futs]
+    burst_nodes = {r.node for r in burst}
+    real_colds = sum(1 for r in burst if r.cold and not r.joined)
+    duplicate_concurrent_colds = max(0, real_colds - 1) if policy.sticky else None
+    router.drain_residual()
+
+    audits = router.audit()  # raises if any node's ledger invariant broke
+
+    pull_bytes = sum(
+        n.iosched.snapshot_stats()["bytes_read"] for n in router.nodes
+    )
+    node_hw = {n.name: n.memory.high_water() for n in router.nodes}
+    per_node_colds = {
+        n.name: n.stats["cold_starts"] for n in router.nodes
+    }
+
+    p50 = float(np.percentile(ttfts, 50))
+    p99 = float(np.percentile(ttfts, 99))
+    rows.append((f"cluster/{tag}/ttft_p50", p50 * 1e6, ""))
+    rows.append((f"cluster/{tag}/ttft_p99", p99 * 1e6, ""))
+    rows.append((f"cluster/{tag}/image_pull_mb", pull_bytes / 1e6, ""))
+    SUMMARY["policies"][tag] = {
+        "ttft_p50_s": p50,
+        "ttft_p99_s": p99,
+        "requests": len(schedule),
+        "cold": sum(1 for r in results if r.cold and not r.joined),
+        "joined": sum(1 for r in results if r.joined),
+        "warm": sum(1 for r in results if not r.cold),
+        "image_pull_bytes": int(pull_bytes),
+        "per_node_cold_starts": per_node_colds,
+        "per_node_high_water_bytes": node_hw,
+        "burst_nodes": sorted(burst_nodes),
+        "burst_real_colds": real_colds,
+        "duplicate_concurrent_colds": duplicate_concurrent_colds,
+        "audit_ok": bool(audits),
+        "sticky": policy.sticky,
+        "scale_outs": router.stats["scale_outs"],
+    }
+    return p99
+
+
+def _scale_out_probe(catalog, cfg, fnames, rows):
+    """Opt-in scale-out: with the knob set, a backed-up sticky function
+    grows a second replica on another node."""
+    from repro.serve.cluster import LocalityFirst
+
+    router = _build_cluster(catalog, LocalityFirst(), scale_out=2)
+    f = fnames[0]
+    futs = [
+        router.submit(f, PROMPT, max_new_tokens=2, mode="spice", cfg=cfg,
+                      simulate_read_bw=SIM_READ_BW / 4)
+        for _ in range(8)
+    ]
+    for fut in futs:
+        fut.result()
+    router.drain_residual()
+    router.audit()
+    replicas = router.replicas(f)
+    rows.append(("cluster/scale_out/replicas", float(len(replicas)), ""))
+    SUMMARY["scale_out"] = {
+        "queue_depth_knob": 2,
+        "replicas": replicas,
+        "scale_outs": router.stats["scale_outs"],
+    }
+
+
+def run() -> list:
+    from repro.serve.cluster import (
+        FunctionCatalog,
+        LeastLoaded,
+        LocalityFirst,
+        RoundRobin,
+    )
+
+    cfg = _cfg()
+    rows: list = []
+    n_requests = 30 if _smoke() else 120
+    SUMMARY.clear()
+    SUMMARY.update({
+        "nodes": N_NODES,
+        "functions": N_FUNCTIONS,
+        "zipf_s": ZIPF_S,
+        "requests": n_requests,
+        "policies": {},
+    })
+
+    with tempfile.TemporaryDirectory() as d:
+        catalog = FunctionCatalog()
+        fnames = _publish_zoo(catalog, cfg, d)
+        schedule = _schedule(fnames, n_requests)
+        p99 = {}
+        for policy in (LocalityFirst(), RoundRobin(), LeastLoaded()):
+            p99[policy.name] = _run_policy(
+                catalog, cfg, policy, fnames, schedule, rows
+            )
+        _scale_out_probe(catalog, cfg, fnames, rows)
+
+    ratio = p99["locality_first"] / max(p99["round_robin"], 1e-9)
+    SUMMARY["locality_vs_roundrobin_p99"] = ratio
+    rows.append(("cluster/locality_vs_roundrobin_p99", ratio, "x (must be <1)"))
+    return rows

@@ -1,8 +1,9 @@
 """Render EXPERIMENTS.md §Dry-run and §Roofline tables from the dry-run
-artifacts.
+artifacts, and the §Cold-start tables from ``BENCH_coldstart.json``.
 
   PYTHONPATH=src:. python -m benchmarks.report            # markdown to stdout
   PYTHONPATH=src:. python -m benchmarks.report --tag x    # tagged variants
+  PYTHONPATH=src:. python -m benchmarks.report --section coldstart
 """
 from __future__ import annotations
 
@@ -12,6 +13,7 @@ import json
 from pathlib import Path
 
 RESULTS = Path(__file__).resolve().parents[1] / "results" / "dryrun"
+COLDSTART = Path(__file__).resolve().parents[1] / "BENCH_coldstart.json"
 
 
 def load(tag: str = ""):
@@ -79,19 +81,117 @@ def roofline_table(cells) -> str:
     return "\n".join(lines)
 
 
+def coldstart_tables(d) -> str:
+    """Markdown for BENCH_coldstart.json: per-mode TTFT, delta economics,
+    memory-pressure high-water marks, and the cluster placement table."""
+    out = []
+    fns = d.get("functions", {})
+    if fns:
+        out += [
+            "#### Per-mode TTFT (WARM-at-working-set vs full-restore wait)",
+            "",
+            "| function | ws_promotion ttft (ms) | full_wait ttft (ms) | ratio | ws time (ms) |",
+            "|---|---|---|---|---|",
+        ]
+        for fname in sorted(fns):
+            ws = fns[fname].get("ws_promotion", {})
+            fw = fns[fname].get("full_wait", {})
+            w, f = ws.get("ttft_s", 0.0), fw.get("ttft_s", 0.0)
+            out.append(
+                f"| {fname} | {w*1e3:.1f} | {f*1e3:.1f} | "
+                f"{w/max(f, 1e-12):.2f} | {ws.get('working_set_s', 0.0)*1e3:.1f} |"
+            )
+        out.append("")
+    delta = d.get("delta")
+    if delta:
+        out += [
+            "#### Delta-chain economics",
+            "",
+            f"- private vs full: **{delta['private_vs_full']:.3f}** "
+            f"({delta['delta_private_bytes']/1e6:.1f} MB of "
+            f"{delta['full_private_bytes']/1e6:.1f} MB)",
+            f"- restore identical through chain: **{delta['restore_identical']}**",
+            "",
+        ]
+    mp = d.get("memory_pressure")
+    if mp:
+        out += [
+            "#### Memory pressure (budget < Σ images)",
+            "",
+            f"- budget {mp['budget_bytes']/1e6:.1f} MB vs images "
+            f"{mp['image_bytes_sum']/1e6:.1f} MB across {mp['tenants']} tenants; "
+            f"all completed: **{mp['all_completed']}** "
+            f"({mp['reclaims']} reclaims, {mp['reclaimed_bytes']/1e6:.1f} MB)",
+            "",
+            "| kind | high-water (MB) |",
+            "|---|---|",
+        ]
+        for k, v in sorted(mp.get("high_water_bytes", {}).items()):
+            out.append(f"| {k} | {v/1e6:.1f} |")
+        out.append("")
+    cl = d.get("cluster")
+    if cl:
+        out += [
+            "#### Cluster placement "
+            f"({cl['functions']} fns / {cl['nodes']} nodes / zipf "
+            f"s={cl['zipf_s']} / {cl['requests']} requests)",
+            "",
+            "| policy | p50 ttft (ms) | p99 ttft (ms) | cold | joined | warm |"
+            " image pull (MB) | dup concurrent colds | peak node mem (MB) |",
+            "|---|---|---|---|---|---|---|---|---|",
+        ]
+        for pname, p in sorted(cl.get("policies", {}).items()):
+            peak = max(
+                (hw.get("total", 0) for hw in
+                 p.get("per_node_high_water_bytes", {}).values()),
+                default=0,
+            )
+            dup = p.get("duplicate_concurrent_colds")
+            out.append(
+                f"| {pname} | {p['ttft_p50_s']*1e3:.2f} | {p['ttft_p99_s']*1e3:.2f} | "
+                f"{p['cold']} | {p['joined']} | {p['warm']} | "
+                f"{p['image_pull_bytes']/1e6:.1f} | "
+                f"{'—' if dup is None else dup} | {peak/1e6:.1f} |"
+            )
+        ratio = cl.get("locality_vs_roundrobin_p99")
+        if ratio is not None:
+            out.append("")
+            out.append(
+                f"locality_first p99 / round_robin p99 = **{ratio:.3f}** (must be <1)"
+            )
+        so = cl.get("scale_out")
+        if so:
+            out.append(
+                f"scale-out knob (queue≥{so['queue_depth_knob']}): replicas "
+                f"{so['replicas']} after burst ({so['scale_outs']} scale-outs)"
+            )
+        out.append("")
+    return "\n".join(out) if out else "_no BENCH_coldstart.json data_"
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--tag", default="")
-    ap.add_argument("--section", default="both", choices=["dryrun", "roofline", "both"])
+    ap.add_argument(
+        "--section", default="all",
+        choices=["dryrun", "roofline", "coldstart", "both", "all"],
+    )
     args = ap.parse_args()
     cells = load(args.tag)
-    if args.section in ("dryrun", "both"):
+    if args.section in ("dryrun", "both", "all"):
         print("### Dry-run table\n")
         print(dryrun_table(cells))
         print()
-    if args.section in ("roofline", "both"):
+    if args.section in ("roofline", "both", "all"):
         print("### Roofline table\n")
         print(roofline_table(cells))
+        print()
+    if args.section in ("coldstart", "all"):
+        print("### Cold-start table\n")
+        if COLDSTART.exists():
+            print(coldstart_tables(json.loads(COLDSTART.read_text())))
+        else:
+            print("_BENCH_coldstart.json not found — run benchmarks.run first_")
 
 
 if __name__ == "__main__":

@@ -7,6 +7,7 @@ Prints ``name,us_per_call,derived`` CSV. Module map:
   working_set       -> Fig 5 / Table 1 (shared/private/zero composition)
   ablation          -> Fig 11          (restore optimizations, incremental)
   concurrency       -> Fig 12 (+Fig 3 interference) (burst max latency)
+  cluster           -> N-node placement policies (locality vs baselines)
   roofline          -> EXPERIMENTS.md §Roofline (from dry-run artifacts)
 
 ``e2e_latency`` additionally drops ``BENCH_coldstart.json`` at the repo
@@ -33,8 +34,30 @@ MODULES = [
     "working_set",
     "ablation",
     "concurrency",
+    "cluster",
     "roofline",
 ]
+
+
+def _write_summary(name: str, mod, summary: dict) -> Path:
+    """One BENCH_<target>.json per module by default; a module that sets
+    ``BENCH_TARGET``/``SUMMARY_KEY`` merges under a key of a shared file
+    (the cluster scenario rides in BENCH_coldstart.json)."""
+    target = getattr(mod, "BENCH_TARGET", name.replace("e2e_latency", "coldstart"))
+    out = REPO_ROOT / f"BENCH_{target}.json"
+    key = getattr(mod, "SUMMARY_KEY", None)
+    try:
+        data = json.loads(out.read_text()) if out.exists() else {}
+    except json.JSONDecodeError:
+        data = {}
+    if key:
+        data[key] = summary
+    else:
+        # keyless modules own the top level but must not clobber sibling
+        # modules' merged keys (e.g. --only e2e_latency after --only cluster)
+        data.update(summary)
+    out.write_text(json.dumps(data, indent=2, sort_keys=True))
+    return out
 
 
 def main() -> None:
@@ -54,8 +77,7 @@ def main() -> None:
                 print(f"{n},{us:.1f},{derived}")
             summary = getattr(mod, "SUMMARY", None)
             if summary:
-                out = REPO_ROOT / f"BENCH_{name.replace('e2e_latency', 'coldstart')}.json"
-                out.write_text(json.dumps(summary, indent=2, sort_keys=True))
+                out = _write_summary(name, mod, summary)
                 print(f"# wrote {out}", flush=True)
         except Exception as e:
             failures += 1

@@ -202,6 +202,20 @@ class NodeImageCache:
             self._images.move_to_end(name)
             return img
 
+    def contains(self, name: Optional[str]) -> bool:
+        """Non-mutating residency probe: no LRU bump, no hit/miss stats.
+        Placement policies poll this per request — a probe that polluted
+        the LRU order or the stats would bias both."""
+        if name is None:
+            return False
+        with self._lock:
+            return name in self._images
+
+    def resident_names(self) -> frozenset:
+        """Names of every resident image (non-mutating; for load probes)."""
+        with self._lock:
+            return frozenset(self._images)
+
     def note_base_served(self, nbytes: int) -> None:
         """Restorers report BASE bytes they memcpy'd (thread-safe)."""
         with self._lock:

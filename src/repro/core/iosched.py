@@ -329,6 +329,23 @@ class PrefetchIOScheduler:
                 self.stats["tensors"] += 1
             self._maybe_complete(stream)
 
+    # ------------------------------------------------------------- probes
+    def inflight(self) -> Dict[str, int]:
+        """Live load probe for placement: the number of registered
+        (uncompleted) streams and an estimate of the bytes still to land
+        across them (``region.nbytes - region.filled`` for streams that
+        carry a ledger region; region-less streams count bytes as 0).
+        Inline streams never register here, so this is exactly the work
+        queued against the reader thread."""
+        with self._cv:
+            streams = [s for s in self._streams if not s._completed]
+            pending = 0
+            for s in streams:
+                region = s.region
+                if region is not None:
+                    pending += max(0, region.nbytes - region.filled)
+        return {"streams": len(streams), "pending_bytes": pending}
+
     # ----------------------------------------------------------- lifecycle
     def shutdown(self, timeout: float = 5.0) -> None:
         with self._cv:

@@ -2,16 +2,19 @@
 
 Each registered *function* is a model instance with a JIF snapshot on disk,
 an optional base image (shared with sibling functions), and serving
-parameters. The engine resolves invocations through this registry."""
+parameters.  Ownership sits with the control plane
+(:class:`repro.serve.cluster.FunctionCatalog`); data-plane nodes hold a
+read-mostly reference and resolve invocations through it.  All operations
+are thread-safe — in a cluster the catalog registers new functions while
+every node's invoke pool reads concurrently."""
 from __future__ import annotations
 
 import dataclasses
 import json
+import threading
 import time
 from pathlib import Path
-from typing import Dict, Optional
-
-from repro.configs.base import ModelConfig
+from typing import Dict, List, Optional
 
 
 @dataclasses.dataclass
@@ -28,23 +31,36 @@ class FunctionSpec:
 class FunctionRegistry:
     def __init__(self):
         self._fns: Dict[str, FunctionSpec] = {}
+        self._lock = threading.Lock()
 
     def register(self, spec: FunctionSpec) -> None:
-        self._fns[spec.name] = spec
+        with self._lock:
+            self._fns[spec.name] = spec
+
+    def unregister(self, name: str) -> Optional[FunctionSpec]:
+        with self._lock:
+            return self._fns.pop(name, None)
 
     def get(self, name: str) -> FunctionSpec:
-        return self._fns[name]
+        with self._lock:
+            return self._fns[name]
 
     def __contains__(self, name: str) -> bool:
-        return name in self._fns
+        with self._lock:
+            return name in self._fns
 
-    def names(self):
-        return sorted(self._fns)
+    def __len__(self) -> int:
+        with self._lock:
+            return len(self._fns)
+
+    def names(self) -> List[str]:
+        with self._lock:
+            return sorted(self._fns)
 
     def save(self, path: str) -> None:
-        Path(path).write_text(
-            json.dumps({n: dataclasses.asdict(s) for n, s in self._fns.items()}, indent=2)
-        )
+        with self._lock:
+            payload = {n: dataclasses.asdict(s) for n, s in self._fns.items()}
+        Path(path).write_text(json.dumps(payload, indent=2))
 
     @classmethod
     def load(cls, path: str) -> "FunctionRegistry":

@@ -1,0 +1,574 @@
+"""Cluster serving layer: control plane / data plane split + N-node routing.
+
+The paper's thesis — disk-resident snapshots make memory elasticity free —
+only pays off when a fleet can place any function on any node and still get
+near-warm restores.  This module supplies the two layers that make that
+expressible:
+
+* :class:`FunctionCatalog` — the CONTROL PLANE.  Owns the
+  :class:`~repro.core.registry.FunctionRegistry` and the offline snapshot
+  authoring path (``publish`` with pre-warm tracing, delta publishing
+  against a parent JIF, ``record_access`` → ``relayout`` bookkeeping,
+  registry persistence).  One catalog serves any number of nodes; it never
+  touches live tenant state except through a node's explicit data-plane
+  mechanisms (:meth:`~repro.serve.node.NodeScheduler.trace_warm`,
+  :meth:`~repro.serve.node.NodeScheduler.warm_state`).
+
+* :class:`ClusterRouter` — the DATA-PLANE FRONT DOOR.  Places invocations
+  across N :class:`~repro.serve.node.NodeScheduler`\\ s through a pluggable
+  :class:`PlacementPolicy`, reading each node's
+  :class:`~repro.serve.node.NodeLoad` probe (queue depth, memory pressure,
+  prefetcher backlog, warm/restoring sets, resident images).
+
+Routing contract:
+
+* **Sticky routing / single population per cluster** — a sticky policy
+  (``LocalityFirst``, the default) pins each function to the node that
+  first restored it; concurrent invocations of one function land on that
+  node and *join* the in-flight restore there, so a single-replica
+  function never pays two concurrent cold restores anywhere in the
+  cluster.
+* **Snapshot locality** — ``LocalityFirst`` ranks candidate nodes
+  warm > joinable in-flight > base-image-cached > delta-parent-cached >
+  least-loaded: a node that holds the function's base image (or the parent
+  of its delta chain) restores it reading only private chunks, which is
+  the whole point of disk-resident snapshots.
+* **Scale-out knob** — with ``scale_out_queue_depth=K``, a function whose
+  least-loaded replica has K or more invocations in flight gets a second
+  replica placed by the same policy (opt-in; capped at the node count).
+
+``RoundRobin`` and ``LeastLoaded`` are non-sticky baselines: they place
+every request independently, which is exactly the placement regime the
+cluster benchmark (``benchmarks/cluster.py``) compares against.
+"""
+from __future__ import annotations
+
+import os
+import threading
+from concurrent.futures import Future
+from typing import Any, Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.core import (
+    FunctionRegistry,
+    FunctionSpec,
+    NodeImageCache,
+    SpiceRestorer,
+    snapshot,
+)
+from repro.core import baselines
+from repro.core.memory import NodeMemoryManager
+from repro.core.snapshot import SnapshotStats
+from repro.core.trace import trace_access_order
+from repro.serve.instance import generate, layerwise_state
+from repro.serve.node import InvokeResult, NodeLoad, NodeScheduler
+
+__all__ = [
+    "FunctionCatalog",
+    "ClusterRouter",
+    "PlacementPolicy",
+    "LocalityFirst",
+    "RoundRobin",
+    "LeastLoaded",
+]
+
+
+# ------------------------------------------------------------ control plane
+class FunctionCatalog:
+    """The serving stack's control plane: registry ownership + snapshot
+    authoring.  Shared by every node of a cluster (nodes hold a reference
+    to ``catalog.registry`` and resolve invocations through it).
+
+    ``base_images`` is the *authoring-side* image cache: ``publish``
+    classifies against bases installed here.  A single-node deployment
+    shares it with the node's serving cache (the facade wires that up); a
+    multi-node cluster instead publishes deltas against a parent JIF on
+    disk, which every node can bootstrap on demand
+    (``BaseImage.from_jif``) — disk, not any one node's RAM, is the
+    cluster-wide source of truth.
+    """
+
+    def __init__(
+        self,
+        registry: Optional[FunctionRegistry] = None,
+        base_images: Optional[NodeImageCache] = None,
+    ):
+        self.registry = registry or FunctionRegistry()
+        self.base_images = base_images or NodeImageCache()
+        self._lock = threading.Lock()
+        # recorded first-touch orders from warm generations (relayout feed)
+        self._recorded: Dict[str, List[str]] = {}
+        # fname -> (jif identity, base-ref name) for placement locality
+        self._locality: Dict[str, Tuple[Tuple[str, int, int], Optional[str]]] = {}
+        self.stats = {"publishes": 0, "relayouts": 0}
+
+    def _bump(self, key: str) -> None:
+        with self._lock:
+            self.stats[key] += 1
+
+    def install_base(self, img, evictable: bool = False) -> None:
+        """Install an operator-provided base image into the authoring cache
+        (pinned by default: there is no JIF behind it to recover from)."""
+        self.base_images.put(img, evictable=evictable)
+
+    # -------------------------------------------------------------- publish
+    def publish(
+        self,
+        name: str,
+        cfg: ModelConfig,
+        params,
+        dirpath: str,
+        base_name: Optional[str] = None,
+        parent: Optional[str] = None,
+        warm_ttl_s: float = 0.0,
+        formats: Tuple[str, ...] = ("jif", "criu", "monolith"),
+        extra_state: Optional[Any] = None,
+        memory: Optional[NodeMemoryManager] = None,
+    ) -> FunctionSpec:
+        """Offline JIF preparation: layerwise layout, pre-warm + trace,
+        access-order relocation, dedup vs an in-memory base (``base_name``)
+        or a parent JIF on disk (``parent`` — delta publishing: any node
+        can bootstrap the parent from the snapshot store, no pre-installed
+        base required); also writes the baselines' formats for comparison.
+        ``memory`` (a node's ledger) charges the writer's state copy as
+        scratch so publishing competes with live tenants honestly."""
+        if base_name is not None and parent is not None:
+            raise ValueError("pass either base_name= or parent=, not both")
+        os.makedirs(dirpath, exist_ok=True)
+        state = layerwise_state(cfg, params)
+
+        # pre-warm trace: run one tiny invocation under the recorder; the
+        # recorder's lazy leaves record first touch when jit coerces them.
+        # ``touched`` is the traced working set; untouched stragglers (and
+        # any extra_state below) land after the ws boundary as residual.
+        def run(view):
+            generate(cfg, None, view, np.zeros((1, 4), np.int32), 2)
+
+        order, touched = trace_access_order(
+            state, run, max_iters=2, return_touched=True
+        )
+        jif_path = f"{dirpath}/{name}.jif"
+        base = self.base_images.get(base_name)
+        if "jif" in formats:
+            full_state = state
+            if extra_state is not None:
+                # VM-style snapshots capture scratch/optimizer memory too;
+                # in the JIF it streams as residual behind the ws boundary
+                full_state = dict(state)
+                full_state["__extra__"] = extra_state
+            snapshot(
+                full_state,
+                jif_path,
+                base=base,
+                parent=parent,
+                access_order=order,
+                working_set=touched,
+                meta={"arch": cfg.name, "function": name},
+                memory=memory,
+            )
+        if "criu" in formats:
+            baselines.criu_star_snapshot(state, f"{dirpath}/{name}.criu")
+        if "monolith" in formats:
+            baselines.monolith_snapshot(
+                state, f"{dirpath}/{name}.mono", extra_state=extra_state
+            )
+        spec = FunctionSpec(
+            name=name, arch=cfg.name, jif_path=jif_path, base_image=base_name,
+            warm_ttl_s=warm_ttl_s,
+        )
+        self.registry.register(spec)
+        self._bump("publishes")
+        return spec
+
+    # ------------------------------------------------------------- locality
+    def locality_key(self, fname: str) -> Optional[str]:
+        """The node-cache key a restore of ``fname`` will look up (its
+        in-memory base name, or its delta parent's cache key) — what
+        placement means by "snapshot locality".  Read once from the JIF
+        header and memoized against the file's identity (a relayout
+        rewrites the file in place and may change the ref)."""
+        spec = self.registry.get(fname)
+        try:
+            st = os.stat(spec.jif_path)
+        except OSError:
+            return spec.base_image
+        ident = (spec.jif_path, st.st_mtime_ns, st.st_size)
+        with self._lock:
+            hit = self._locality.get(fname)
+            if hit is not None and hit[0] == ident:
+                return hit[1]
+        from repro.core.jif import JifReader
+
+        try:
+            with JifReader(spec.jif_path) as r:
+                ref = r.base_ref
+        except Exception:
+            return spec.base_image
+        key = ref.get("name") if ref else None
+        with self._lock:
+            self._locality[fname] = (ident, key)
+        return key
+
+    # ---------------------------------------------------- record → relayout
+    def record_access(
+        self,
+        fname: str,
+        node: NodeScheduler,
+        prompt: Optional[np.ndarray] = None,
+        max_new_tokens: int = 4,
+        cfg: Optional[ModelConfig] = None,
+    ) -> List[str]:
+        """Trace one warm generation on ``node`` (the instance must be WARM
+        there) and keep the observed first-touch order for
+        :meth:`relayout`.  Returns the touched order."""
+        order = node.trace_warm(fname, prompt, max_new_tokens, cfg)
+        with self._lock:
+            self._recorded[fname] = order
+        return order
+
+    def recorded_order(self, fname: str) -> Optional[List[str]]:
+        with self._lock:
+            return self._recorded.get(fname)
+
+    def relayout(
+        self,
+        fname: str,
+        order: Optional[List[str]] = None,
+        node: Optional[NodeScheduler] = None,
+    ) -> SnapshotStats:
+        """Re-snapshot a function with the recorded first-touch order: the
+        JIF data segment is rewritten so the observed working set sits in
+        front of the boundary — closing the record → relayout → faster-TTFT
+        loop.  Uses ``node``'s warm instance state when resident (zero
+        storage reads), else restores the current image from disk once.
+        A delta-published function is rewritten as a delta against the
+        SAME parent JIF — dropping the chain would balloon the file to
+        full size and erase its placement locality key."""
+        from repro.core.jif import JifReader
+
+        spec = self.registry.get(fname)
+        if order is None:
+            order = self.recorded_order(fname)
+        if order is None:
+            raise RuntimeError(
+                f"{fname}: no recorded access order — call record_access first"
+            )
+        with JifReader(spec.jif_path) as r:
+            ref = r.base_ref
+        parent = ref.get("path") if ref else None
+        state = node.warm_state(fname) if node is not None else None
+        if state is None:
+            restorer = SpiceRestorer(
+                pool=node.pool if node is not None else None,
+                node_cache=(
+                    node.node_cache if node is not None else self.base_images
+                ),
+                pipelined=False,
+                iosched=node.iosched if node is not None else None,
+            )
+            state, _, _, _ = restorer.restore(spec.jif_path)
+        stats = snapshot(
+            state,
+            spec.jif_path,
+            base=None if parent else self.base_images.get(spec.base_image),
+            parent=parent,
+            access_order=order,
+            working_set=order,
+            meta={"arch": spec.arch, "function": fname, "relayout": True},
+            # rewrite copy charged as scratch against the tracing node
+            memory=node.memory if node is not None else None,
+        )
+        self._bump("relayouts")
+        return stats
+
+    # ---------------------------------------------------------- persistence
+    def save(self, path: str) -> None:
+        """Persist the registry (the catalog's durable state — recorded
+        orders are advisory and rebuilt from live traffic)."""
+        self.registry.save(path)
+
+    @classmethod
+    def load(cls, path: str, base_images: Optional[NodeImageCache] = None,
+             ) -> "FunctionCatalog":
+        return cls(registry=FunctionRegistry.load(path), base_images=base_images)
+
+
+# -------------------------------------------------------- placement policies
+class PlacementPolicy:
+    """Picks a node index for one invocation.  ``place`` sees the function's
+    spec, its snapshot-locality key (:meth:`FunctionCatalog.locality_key`),
+    and one :class:`NodeLoad` per candidate; it returns an index into that
+    candidate list.  ``sticky`` policies place each function once and the
+    router pins it (replicas only grow through the scale-out knob);
+    non-sticky policies place every request independently."""
+
+    name = "policy"
+    sticky = False
+    # policies that ignore the probes (RoundRobin) set this False and the
+    # router skips the per-request O(N × locks) load collection; place()
+    # then receives placeholder NodeLoad()s of the right length
+    needs_loads = True
+
+    def place(
+        self, spec: FunctionSpec, key: Optional[str], loads: Sequence[NodeLoad]
+    ) -> int:
+        raise NotImplementedError
+
+    @staticmethod
+    def _least_loaded(loads: Sequence[NodeLoad]) -> int:
+        return min(
+            range(len(loads)),
+            key=lambda i: (
+                loads[i].queue_depth,
+                loads[i].pending_io_bytes,
+                loads[i].pressure,
+            ),
+        )
+
+
+class LocalityFirst(PlacementPolicy):
+    """warm > joinable in-flight > base-image-cached > delta-parent-cached >
+    least-loaded; ties inside a tier break toward the least-loaded node."""
+
+    name = "locality_first"
+    sticky = True
+
+    def place(self, spec, key, loads):
+        def tier(load: NodeLoad) -> int:
+            if spec.name in load.warm:
+                return 0
+            if spec.name in load.restoring:
+                return 1
+            if spec.base_image is not None and spec.base_image in load.images:
+                return 2
+            if key is not None and key in load.images:
+                return 3
+            return 4
+
+        return min(
+            range(len(loads)),
+            key=lambda i: (
+                tier(loads[i]),
+                loads[i].queue_depth,
+                loads[i].pending_io_bytes,
+                loads[i].pressure,
+            ),
+        )
+
+
+class RoundRobin(PlacementPolicy):
+    """Spread requests blindly — the no-locality baseline."""
+
+    name = "round_robin"
+    sticky = False
+    needs_loads = False
+
+    def __init__(self):
+        self._lock = threading.Lock()
+        self._next = 0
+
+    def place(self, spec, key, loads):
+        with self._lock:
+            idx = self._next % len(loads)
+            self._next += 1
+        return idx
+
+
+class LeastLoaded(PlacementPolicy):
+    """Pure load balancing: ignore snapshot locality entirely."""
+
+    name = "least_loaded"
+    sticky = False
+
+    def place(self, spec, key, loads):
+        return self._least_loaded(loads)
+
+
+_EMPTY_LOAD = NodeLoad()  # placeholder for needs_loads=False policies
+
+
+# ---------------------------------------------------------------- the router
+class ClusterRouter:
+    """Places invocations across N node data planes (see module docstring
+    for the routing contract).  The router adopts registry ownership onto
+    its nodes: every node resolves specs through ``catalog.registry``."""
+
+    def __init__(
+        self,
+        catalog: FunctionCatalog,
+        nodes: Sequence[NodeScheduler],
+        placement: Optional[PlacementPolicy] = None,
+        scale_out_queue_depth: Optional[int] = None,
+    ):
+        if not nodes:
+            raise ValueError("a cluster needs at least one node")
+        self.catalog = catalog
+        self.nodes: List[NodeScheduler] = list(nodes)
+        taken = {n.name for n in self.nodes if n.name}
+        for i, node in enumerate(self.nodes):
+            node.registry = catalog.registry  # control plane owns the registry
+            if not node.name and len(self.nodes) > 1:
+                # single-node paths keep node=""; skip caller-taken names
+                name = f"node{i}"
+                while name in taken:
+                    name = f"{name}x"
+                node.name = name
+                taken.add(name)
+        names = [n.name for n in self.nodes]
+        if len(set(names)) != len(names):
+            raise ValueError(f"node names must be unique, got {names}")
+        self.placement = placement or LocalityFirst()
+        self.scale_out_queue_depth = scale_out_queue_depth
+        self._lock = threading.Lock()
+        self._assign: Dict[str, List[int]] = {}  # sticky fname -> node idxs
+        self.stats = {"routed": 0, "scale_outs": 0}
+
+    # ------------------------------------------------------------- routing
+    def _probe(self) -> List[NodeLoad]:
+        if self.placement.needs_loads:
+            return [n.load() for n in self.nodes]
+        return [_EMPTY_LOAD] * len(self.nodes)
+
+    def _pick(self, fname: str) -> int:
+        """Load probes run OUTSIDE the router lock (each takes several node
+        locks; serializing all routing through them would bottleneck the
+        burst regime).  The lock only guards the sticky replica map —
+        probes may be a beat stale, which placement tolerates (it ranks)."""
+        spec = self.catalog.registry.get(fname)
+        key = self.catalog.locality_key(fname)
+        with self._lock:
+            self.stats["routed"] += 1
+            assigned = (
+                list(self._assign.get(fname, ())) if self.placement.sticky
+                else None
+            )
+        if assigned is None:  # non-sticky: place every request independently
+            return self.placement.place(spec, key, self._probe())
+        if not assigned:
+            idx = self.placement.place(spec, key, self._probe())
+            with self._lock:
+                won = self._assign.setdefault(fname, [idx])
+                if won == [idx]:
+                    return idx
+                assigned = list(won)  # lost the placement race: join the winner
+        # sticky: route among this function's replicas (joins ride the
+        # in-flight restore; warm hits stay warm)
+        loads = {i: self.nodes[i].load() for i in assigned}
+        idx = min(
+            assigned,
+            key=lambda i: (loads[i].queue_depth, loads[i].pressure),
+        )
+        if (
+            self.scale_out_queue_depth is not None
+            and len(assigned) < len(self.nodes)
+            and loads[idx].queue_depth >= self.scale_out_queue_depth
+        ):
+            # opt-in scale-out: the least-loaded replica is still backed
+            # up — place one more replica by the same policy
+            rest = [i for i in range(len(self.nodes)) if i not in assigned]
+            rest_loads = (
+                [self.nodes[i].load() for i in rest]
+                if self.placement.needs_loads
+                else [_EMPTY_LOAD] * len(rest)
+            )
+            new = rest[self.placement.place(spec, key, rest_loads)]
+            with self._lock:
+                current = self._assign.setdefault(fname, [idx])
+                if new not in current and len(current) < len(self.nodes):
+                    current.append(new)
+                    self.stats["scale_outs"] += 1
+                    idx = new
+        return idx
+
+    def submit(
+        self,
+        fname: str,
+        prompt: np.ndarray,
+        max_new_tokens: int = 8,
+        mode: str = "spice",
+        cfg: Optional[ModelConfig] = None,
+        simulate_read_bw: Optional[float] = None,
+    ) -> "Future[InvokeResult]":
+        idx = self._pick(fname)
+        return self.nodes[idx].submit(
+            fname, prompt, max_new_tokens, mode, cfg, simulate_read_bw
+        )
+
+    def invoke(self, *args, **kwargs) -> InvokeResult:
+        return self.submit(*args, **kwargs).result()
+
+    # ------------------------------------------------------------- queries
+    def node(self, name: str) -> NodeScheduler:
+        for n in self.nodes:
+            if n.name == name:
+                return n
+        raise KeyError(name)
+
+    def loads(self) -> List[NodeLoad]:
+        return [n.load() for n in self.nodes]
+
+    def replicas(self, fname: str) -> List[str]:
+        """Node names a sticky function is currently placed on."""
+        with self._lock:
+            return [self.nodes[i].name for i in self._assign.get(fname, [])]
+
+    # ------------------------------------------------------ fleet operations
+    def evict(self, fname: Optional[str] = None) -> None:
+        for n in self.nodes:
+            n.evict(fname)
+
+    def reap_expired(self) -> int:
+        return sum(n.reap_expired() for n in self.nodes)
+
+    def drain_residual(self, timeout: float = 60.0) -> bool:
+        return all(n.drain_residual(timeout) for n in self.nodes)
+
+    def audit(self) -> Dict[str, Dict[str, int]]:
+        """Run every node's ledger audit; returns per-node snapshots (and
+        raises on the first node whose invariant is broken)."""
+        return {n.name: n.memory.audit() for n in self.nodes}
+
+    def close(self) -> None:
+        """Explicit fleet teardown: stop every node's background reaper.
+        (Reaper threads also exit on GC — they only weakref their node —
+        so this is for deterministic shutdown, not leak avoidance.)"""
+        for n in self.nodes:
+            n.stop_reaper()
+
+    # ---------------------------------------------- control-plane passthrough
+    def _warm_node(self, fname: str) -> Optional[NodeScheduler]:
+        """The node currently serving ``fname`` WARM, else any node that
+        holds its (evicted) instance, else None."""
+        from repro.serve.instance import InstanceState
+
+        fallback = None
+        for n in self.nodes:
+            inst = n.instance(fname)
+            if inst is None:
+                continue
+            if inst.state is InstanceState.WARM:
+                return n
+            fallback = fallback or n
+        return fallback
+
+    def record_access(self, fname: str, **kwargs) -> List[str]:
+        """Trace ``fname`` on whichever node currently holds it WARM."""
+        from repro.serve.instance import NotWarmError
+
+        for n in self.nodes:
+            if n.instance(fname) is not None:
+                try:
+                    return self.catalog.record_access(fname, n, **kwargs)
+                except NotWarmError:
+                    continue
+        raise RuntimeError(f"{fname}: no node holds a WARM instance")
+
+    def relayout(self, fname: str, order: Optional[List[str]] = None) -> SnapshotStats:
+        # prefer a node with the WARM tree resident (zero-read re-snapshot);
+        # any instance-holding node is only a ledger to charge the fallback
+        # disk restore against
+        return self.catalog.relayout(
+            fname, order=order, node=self._warm_node(fname)
+        )

@@ -6,18 +6,30 @@ The monolithic ``ServerlessNode`` was split into a layered runtime:
   queues, demand boost, bandwidth arbitration),
 * :mod:`repro.serve.instance` — per-function lifecycle state machines
   (COLD → RESTORING → WARM → EVICTED) + layer-gated generation,
-* :mod:`repro.serve.node`     — concurrent admission, keep-alive TTL, LRU
-  eviction under a shared memory budget.
+* :mod:`repro.serve.node`     — the per-node DATA PLANE: concurrent
+  admission, keep-alive TTL, LRU eviction under a shared memory budget,
+* :mod:`repro.serve.cluster`  — the CONTROL PLANE (`FunctionCatalog`:
+  publish/relayout/registry ownership) and the N-node `ClusterRouter`
+  with pluggable snapshot-locality-aware placement.
 
-``ServerlessNode`` here is a thin facade over :class:`NodeScheduler` so the
-existing examples, benchmarks, and tests keep their `publish`/`invoke`/
-`evict` surface; new code should target the layers directly.
+``ServerlessNode`` here is a thin facade composing a catalog with a
+one-node router, so the existing examples, benchmarks, and tests keep
+their `publish`/`invoke`/`evict` surface; new code should target the
+layers directly.
 """
 from __future__ import annotations
 
 from typing import Optional
 
 from repro.core import BufferPool, FunctionRegistry, NodeImageCache, PrefetchIOScheduler
+from repro.serve.cluster import (  # re-exported: the cluster layer
+    ClusterRouter,
+    FunctionCatalog,
+    LeastLoaded,
+    LocalityFirst,
+    PlacementPolicy,
+    RoundRobin,
+)
 from repro.serve.instance import (  # re-exported: public serving helpers
     FunctionInstance,
     InstanceState,
@@ -31,6 +43,7 @@ from repro.serve.node import (
     FixedTTLPolicy,
     InvokeResult,
     KeepAlivePolicy,
+    NodeLoad,
     NodeScheduler,
     NoKeepAlive,
 )
@@ -38,10 +51,17 @@ from repro.serve.node import (
 __all__ = [
     "ServerlessNode",
     "NodeScheduler",
+    "NodeLoad",
     "InvokeResult",
     "KeepAlivePolicy",
     "FixedTTLPolicy",
     "NoKeepAlive",
+    "FunctionCatalog",
+    "ClusterRouter",
+    "PlacementPolicy",
+    "LocalityFirst",
+    "RoundRobin",
+    "LeastLoaded",
     "FunctionInstance",
     "InstanceState",
     "layer_sequence",
@@ -52,10 +72,14 @@ __all__ = [
 
 
 class ServerlessNode:
-    """One node: registry + base-image cache + buffer pool + warm instances.
+    """One node: catalog (control plane) + a single-node router over one
+    `NodeScheduler` (data plane).
 
-    Thin facade over :class:`NodeScheduler`; construction signature and the
-    ``publish`` / ``invoke`` / ``evict`` surface match the seed engine."""
+    Thin facade; construction signature and the ``publish`` / ``invoke`` /
+    ``evict`` surface match the seed engine.  The catalog's authoring
+    base-image cache IS the node's serving cache here (one machine), so
+    ``node_cache.put(...)`` keeps feeding both publish-time dedup and
+    restore-time base resolution."""
 
     def __init__(
         self,
@@ -63,12 +87,22 @@ class ServerlessNode:
         node_cache: Optional[NodeImageCache] = None,
         pool: Optional[BufferPool] = None,
         scheduler: Optional[NodeScheduler] = None,
+        catalog: Optional[FunctionCatalog] = None,
         **scheduler_kwargs,
     ):
+        if scheduler is None and catalog is not None and node_cache is None:
+            # injected catalog, default scheduler: share the catalog's
+            # authoring cache as the serving cache too, so base_name-
+            # published functions restore (their base lives there)
+            node_cache = catalog.base_images
         self._sched = scheduler or NodeScheduler(
             registry=registry, node_cache=node_cache, pool=pool,
             **scheduler_kwargs,
         )
+        self._catalog = catalog or FunctionCatalog(
+            registry=self._sched.registry, base_images=self._sched.node_cache
+        )
+        self._router = ClusterRouter(self._catalog, [self._sched])
 
     # shared-component accessors (benchmarks swap the pool between runs)
     @property
@@ -76,8 +110,16 @@ class ServerlessNode:
         return self._sched
 
     @property
+    def catalog(self) -> FunctionCatalog:
+        return self._catalog
+
+    @property
+    def router(self) -> ClusterRouter:
+        return self._router
+
+    @property
     def registry(self) -> FunctionRegistry:
-        return self._sched.registry
+        return self._catalog.registry
 
     @property
     def node_cache(self) -> NodeImageCache:
@@ -104,19 +146,21 @@ class ServerlessNode:
         self._sched.memory_budget = new_pool.capacity or None
 
     def publish(self, *args, **kwargs):
-        return self._sched.publish(*args, **kwargs)
+        # the writer's state copy is node memory too: charge it as scratch
+        kwargs.setdefault("memory", self._sched.memory)
+        return self._catalog.publish(*args, **kwargs)
 
     def invoke(self, *args, **kwargs) -> InvokeResult:
-        return self._sched.invoke(*args, **kwargs)
+        return self._router.invoke(*args, **kwargs)
 
     def submit(self, *args, **kwargs):
-        return self._sched.submit(*args, **kwargs)
+        return self._router.submit(*args, **kwargs)
 
     def evict(self, fname: Optional[str] = None) -> None:
         self._sched.evict(fname)
 
-    def record_access(self, *args, **kwargs):
-        return self._sched.record_access(*args, **kwargs)
+    def record_access(self, fname, *args, **kwargs):
+        return self._catalog.record_access(fname, self._sched, *args, **kwargs)
 
-    def relayout(self, *args, **kwargs):
-        return self._sched.relayout(*args, **kwargs)
+    def relayout(self, fname, order=None):
+        return self._catalog.relayout(fname, order=order, node=self._sched)

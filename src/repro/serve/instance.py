@@ -29,6 +29,7 @@ back cache *keys*, not re-traces.
 """
 from __future__ import annotations
 
+import contextlib
 import enum
 import threading
 import time
@@ -187,6 +188,12 @@ def faasnap_wait(tree):
     )
 
 
+class NotWarmError(RuntimeError):
+    """The instance was not WARM when a warm-tree pin was requested —
+    distinct from RuntimeErrors raised by work done *under* the pin, so
+    callers with a not-warm fallback don't swallow real failures."""
+
+
 # ---------------------------------------------------------- instance state
 class InstanceState(enum.Enum):
     COLD = "cold"
@@ -245,6 +252,27 @@ class FunctionInstance:
     @property
     def idle(self) -> bool:
         return self.inflight == 0
+
+    @contextlib.contextmanager
+    def pinned_warm_tree(self):
+        """Check-and-pin a WARM instance's tree atomically: yields the tree
+        with ``inflight`` bumped so a concurrent eviction cannot null it
+        mid-use (tracing, relayout state capture).  Raises ``NotWarmError``
+        when the instance is not WARM — the check and the pin must happen
+        under one lock hold, or an eviction could slip between them."""
+        with self.cond:
+            if self.state is not InstanceState.WARM:
+                raise NotWarmError(
+                    f"{self.spec.name}: needs a WARM instance (is {self.state.value})"
+                )
+            tree = self.tree
+            self.inflight += 1
+        try:
+            yield tree
+        finally:
+            with self.cond:
+                self.inflight -= 1
+                self.cond.notify_all()
 
     # -------------------------------------------------------- transitions
     # All transition helpers assume ``self.cond`` is held by the caller.

@@ -7,12 +7,22 @@ The serving stack is layered (bottom up):
   demand boost).
 * ``repro.serve.instance`` — per-function lifecycle state machines that own
   restore handles and generation state.
-* ``repro.serve.node``     — this module: admits concurrent invocations
-  through a thread pool, routes them warm / joined / cold, enforces
-  keep-alive TTLs, and drives the pressure reclaim ladder (residual tails
+* ``repro.serve.node``     — this module: the per-node DATA PLANE.  It
+  admits concurrent invocations through a thread pool, routes them warm /
+  joined / cold, enforces keep-alive TTLs (including a background reaper
+  for idle nodes), and drives the pressure reclaim ladder (residual tails
   → cached base images → LRU warm state) over the node's single memory
-  ledger (:class:`repro.core.memory.NodeMemoryManager`); also carries the
-  offline publish path.
+  ledger (:class:`repro.core.memory.NodeMemoryManager`).  Restores admit
+  images straight from disk on demand (delta parents bootstrap through
+  the node's image cache via ``BaseImage.from_jif``), so a node needs
+  nothing but the snapshot store and a registry reference.
+
+The CONTROL PLANE — snapshot authoring (``publish`` / ``relayout``),
+recorded-access bookkeeping, and registry ownership — lives in
+:class:`repro.serve.cluster.FunctionCatalog`; this module only exposes the
+data-plane *mechanisms* the catalog drives (:meth:`NodeScheduler.trace_warm`,
+:meth:`NodeScheduler.warm_state`) and the :class:`NodeLoad` probe surface
+that cluster placement policies read.
 
 Invocations of a function whose restore is already in flight *join* that
 restore (generate over the same tracked-handle tree) rather than re-reading
@@ -24,8 +34,7 @@ import dataclasses
 import threading
 import time
 from concurrent.futures import Future, ThreadPoolExecutor
-from functools import partial
-from typing import Any, Dict, List, Optional, Tuple
+from typing import Dict, FrozenSet, List, Optional
 
 import jax
 import jax.numpy as jnp
@@ -39,7 +48,6 @@ from repro.core import (
     NodeImageCache,
     PrefetchIOScheduler,
     SpiceRestorer,
-    snapshot,
 )
 from repro.core import baselines
 from repro.core.memory import (
@@ -48,17 +56,16 @@ from repro.core.memory import (
     NodeMemoryManager,
 )
 from repro.core.restore import RestoreStats
-from repro.core.snapshot import SnapshotStats
-from repro.core.trace import AccessRecorder, trace_access_order
+from repro.core.trace import AccessRecorder
 from repro.core.treeutil import unflatten_state
 from repro.serve.instance import (
     FunctionInstance,
     InstanceState,
+    NotWarmError,
     _FaasnapLeaf,
     _tree_bytes as _tree_nbytes,
     faasnap_wait,
     generate,
-    layerwise_state,
     wait_tree,
 )
 
@@ -75,6 +82,26 @@ class InvokeResult:
     function: str = ""
     queue_s: float = 0.0  # admission delay in the node's invoke pool
     joined: bool = False  # rode an in-flight restore instead of starting one
+    node: str = ""  # serving node's name ("" on single-node paths)
+
+
+@dataclasses.dataclass(frozen=True)
+class NodeLoad:
+    """One node's probe surface for cluster placement — a consistent-enough
+    snapshot (each field is read under its own lock; placement tolerates
+    the skew, it only ranks nodes).  ``queue_depth`` counts invocations
+    submitted but not yet finished (queued + running), ``pending_io_bytes``
+    the bytes the node's prefetch arbiter still has to land."""
+
+    node: str = ""
+    queue_depth: int = 0
+    pressure: float = 0.0          # memory ledger: held / budget
+    pending_io_bytes: int = 0      # iosched: bytes still to land
+    inflight_streams: int = 0      # iosched: live (uncompleted) streams
+    warm: FrozenSet[str] = frozenset()       # WARM/WARMING function names
+    restoring: FrozenSet[str] = frozenset()  # RESTORING (joinable) names
+    images: FrozenSet[str] = frozenset()     # resident base-image names
+    warm_bytes: int = 0
 
 
 # ------------------------------------------------------------ keep-alive
@@ -111,7 +138,14 @@ class NoKeepAlive(KeepAlivePolicy):
 
 # ---------------------------------------------------------------- scheduler
 class NodeScheduler:
-    """Concurrent serving runtime for one node."""
+    """Concurrent serving runtime for one node — pure data plane.
+
+    ``registry`` is a *reference*: the control plane
+    (:class:`repro.serve.cluster.FunctionCatalog`) owns registration; the
+    node only resolves specs.  ``name`` identifies the node in a cluster
+    (stamped on every :class:`InvokeResult`; "" on single-node paths).
+    ``reap_interval_s`` starts a background keep-alive reaper so expired
+    warm instances release their ledger bytes even on an idle node."""
 
     def __init__(
         self,
@@ -123,7 +157,10 @@ class NodeScheduler:
         memory_budget_bytes: Optional[int] = None,
         keepalive: Optional[KeepAlivePolicy] = None,
         memory: Optional[NodeMemoryManager] = None,
+        name: str = "",
+        reap_interval_s: Optional[float] = None,
     ):
+        self.name = name
         self.registry = registry or FunctionRegistry()
         self.node_cache = node_cache or NodeImageCache()
         self._pool = pool or BufferPool()
@@ -155,8 +192,11 @@ class NodeScheduler:
         # in-flight residual streams (fname -> RestoreStats of a WARMING
         # instance): counted against the memory budget until they drain
         self._residual: Dict[str, RestoreStats] = {}
-        # recorded first-touch orders from warm generations (relayout feed)
-        self._recorded: Dict[str, List[str]] = {}
+        # invocations submitted but not finished (queued + running): the
+        # cluster router's queue-depth signal
+        self._pending = 0
+        self._reaper_stop: Optional[threading.Event] = None
+        self.reap_interval_s = reap_interval_s
         self.stats = {
             "invocations": 0,
             "warm_hits": 0,
@@ -165,10 +205,11 @@ class NodeScheduler:
             "ttl_evictions": 0,
             "lru_evictions": 0,
             "ws_promotions": 0,
-            "relayouts": 0,
             "residual_evictions": 0,
             "ws_rerestores": 0,
         }
+        if reap_interval_s is not None:
+            self.start_reaper(reap_interval_s)
 
     def _bump(self, key: str, n: int = 1) -> None:
         with self._slock:
@@ -196,70 +237,6 @@ class NodeScheduler:
     def memory_budget(self, nbytes: Optional[int]) -> None:
         self.memory.budget = nbytes
 
-    # -------------------------------------------------------------- publish
-    def publish(
-        self,
-        name: str,
-        cfg: ModelConfig,
-        params,
-        dirpath: str,
-        base_name: Optional[str] = None,
-        warm_ttl_s: float = 0.0,
-        formats: Tuple[str, ...] = ("jif", "criu", "monolith"),
-        extra_state: Optional[Any] = None,
-    ) -> FunctionSpec:
-        """Offline JIF preparation: layerwise layout, pre-warm + trace,
-        access-order relocation, dedup vs base; also writes the baselines'
-        formats for comparison."""
-        import os
-
-        os.makedirs(dirpath, exist_ok=True)
-        state = layerwise_state(cfg, params)
-
-        # pre-warm trace: run one tiny invocation under the recorder; the
-        # recorder's lazy leaves record first touch when jit coerces them.
-        # ``touched`` is the traced working set; untouched stragglers (and
-        # any extra_state below) land after the ws boundary as residual.
-        def run(view):
-            generate(cfg, None, view, np.zeros((1, 4), np.int32), 2)
-
-        order, touched = trace_access_order(
-            state, run, max_iters=2, return_touched=True
-        )
-        jif_path = f"{dirpath}/{name}.jif"
-        base = self.node_cache.get(base_name)
-        if "jif" in formats:
-            full_state = state
-            if extra_state is not None:
-                # VM-style snapshots capture scratch/optimizer memory too;
-                # in the JIF it streams as residual behind the ws boundary
-                full_state = dict(state)
-                full_state["__extra__"] = extra_state
-            # memory=: the writer's materialized copy is node memory too —
-            # the pipeline charges it as scratch so publish competes with
-            # live tenants honestly
-            snapshot(
-                full_state,
-                jif_path,
-                base=base,
-                access_order=order,
-                working_set=touched,
-                meta={"arch": cfg.name, "function": name},
-                memory=self.memory,
-            )
-        if "criu" in formats:
-            baselines.criu_star_snapshot(state, f"{dirpath}/{name}.criu")
-        if "monolith" in formats:
-            baselines.monolith_snapshot(
-                state, f"{dirpath}/{name}.mono", extra_state=extra_state
-            )
-        spec = FunctionSpec(
-            name=name, arch=cfg.name, jif_path=jif_path, base_image=base_name,
-            warm_ttl_s=warm_ttl_s,
-        )
-        self.registry.register(spec)
-        return spec
-
     # --------------------------------------------------------------- invoke
     def submit(
         self,
@@ -272,10 +249,17 @@ class NodeScheduler:
     ) -> "Future[InvokeResult]":
         """Admit an invocation into the node's worker pool."""
         t_submit = time.perf_counter()
-        return self._exec.submit(
-            self._invoke, fname, prompt, max_new_tokens, mode, cfg,
-            simulate_read_bw, t_submit,
-        )
+        with self._slock:
+            self._pending += 1
+        try:
+            return self._exec.submit(
+                self._invoke, fname, prompt, max_new_tokens, mode, cfg,
+                simulate_read_bw, t_submit,
+            )
+        except BaseException:
+            with self._slock:
+                self._pending -= 1
+            raise
 
     def invoke(
         self,
@@ -323,6 +307,76 @@ class NodeScheduler:
         if n:
             self._bump("ttl_evictions", n)
         return n
+
+    # ------------------------------------------------------ background reaper
+    def start_reaper(self, interval_s: float) -> None:
+        """Enforce keep-alive TTLs periodically on a daemon thread, so an
+        idle node releases expired warm instances' ledger bytes instead of
+        holding them until the next invocation's budget sweep.  The thread
+        holds only a weakref to the scheduler: a dropped node (benchmarks
+        build short-lived per-policy fleets) is GC-able without an explicit
+        ``stop_reaper`` and its reaper exits on the next tick."""
+        import weakref
+
+        self.stop_reaper()
+        stop = threading.Event()
+        self._reaper_stop = stop
+        self.reap_interval_s = interval_s
+        ref = weakref.ref(self)
+
+        def loop():
+            while not stop.wait(interval_s):
+                node = ref()
+                if node is None:
+                    return  # scheduler got collected: nothing left to reap
+                try:
+                    if node.reap_expired():
+                        # expired state released: settle the ledger too
+                        # (frees any blocked reserve waiting on these bytes)
+                        node._enforce_budget()
+                except Exception:
+                    pass  # a failed sweep must not kill the reaper
+                finally:
+                    node = None  # never hold the node across the sleep
+
+        threading.Thread(
+            target=loop, name=f"reaper-{self.name or 'node'}", daemon=True
+        ).start()
+
+    def stop_reaper(self) -> None:
+        if self._reaper_stop is not None:
+            self._reaper_stop.set()
+            self._reaper_stop = None
+
+    # -------------------------------------------------------------- probes
+    def load(self) -> NodeLoad:
+        """The placement probe surface (see :class:`NodeLoad`)."""
+        with self._slock:
+            queue_depth = self._pending
+        with self._ilock:
+            insts = list(self._instances.items())
+        warm = frozenset(
+            n for n, i in insts
+            if i.state in (InstanceState.WARM, InstanceState.WARMING)
+        )
+        restoring = frozenset(
+            n for n, i in insts if i.state is InstanceState.RESTORING
+        )
+        warm_bytes = sum(
+            i.memory_bytes for n, i in insts if n in warm
+        )
+        io = self.iosched.inflight()
+        return NodeLoad(
+            node=self.name,
+            queue_depth=queue_depth,
+            pressure=self.memory.pressure(),
+            pending_io_bytes=io["pending_bytes"],
+            inflight_streams=io["streams"],
+            warm=warm,
+            restoring=restoring,
+            images=self.node_cache.resident_names(),
+            warm_bytes=warm_bytes,
+        )
 
     def warm_bytes(self) -> int:
         """Resident warm-state bytes — WARMING instances count too: their
@@ -398,8 +452,12 @@ class NodeScheduler:
             target=finalize, name=f"residual-{fname}", daemon=True
         ).start()
 
-    # ---------------------------------------------------- record → relayout
-    def record_access(
+    # ------------------------------------------------ warm-state mechanisms
+    # Data-plane primitives the control plane (FunctionCatalog) drives: the
+    # instances — and the locks guarding them — live here, so tracing and
+    # state capture must too; what to DO with the results (record →
+    # relayout bookkeeping, JIF rewrites) is the catalog's business.
+    def trace_warm(
         self,
         fname: str,
         prompt: Optional[np.ndarray] = None,
@@ -408,86 +466,35 @@ class NodeScheduler:
     ) -> List[str]:
         """Capture the ACTUAL first-touch order from a warm generation (the
         paper's §5 kernel tracing module, fed by production traffic instead
-        of the offline pre-warm run).  The instance must be WARM; the traced
-        order is kept for :meth:`relayout`.  Returns the touched order."""
+        of the offline pre-warm run).  The instance must be WARM."""
         from repro.configs import get_config
 
         spec = self.registry.get(fname)
         cfg = cfg or get_config(spec.arch)
         inst = self.instance(fname)
         if inst is None:
-            raise RuntimeError(f"{fname}: record_access needs a WARM instance")
+            raise RuntimeError(f"{fname}: trace_warm needs a WARM instance")
         if prompt is None:
             prompt = np.zeros((1, 4), np.int32)
-        with inst.cond:
-            # check + pin atomically: a concurrent eviction between an
-            # unlocked check and the inflight bump would null the tree
-            if inst.state is not InstanceState.WARM:
-                raise RuntimeError(f"{fname}: record_access needs a WARM instance")
-            tree = inst.tree
-            inst.inflight += 1
-        try:
+        with inst.pinned_warm_tree() as tree:
             rec = AccessRecorder(tree)
             generate(cfg, None, rec.view(), prompt, max_new_tokens)
-            order = rec.touched
-        finally:
-            with inst.cond:
-                inst.inflight -= 1
-                inst.cond.notify_all()
-        with self._slock:
-            self._recorded[fname] = order
-        return order
+            return rec.touched
 
-    def recorded_order(self, fname: str) -> Optional[List[str]]:
-        with self._slock:
-            return self._recorded.get(fname)
-
-    def relayout(self, fname: str, order: Optional[List[str]] = None) -> SnapshotStats:
-        """Re-snapshot a function with the recorded first-touch order: the
-        JIF data segment is rewritten so the observed working set sits in
-        front of the boundary — closing the record → relayout → faster-TTFT
-        loop.  Uses the warm instance's state when resident, else restores
-        the current image once."""
-        spec = self.registry.get(fname)
-        if order is None:
-            order = self.recorded_order(fname)
-        if order is None:
-            raise RuntimeError(
-                f"{fname}: no recorded access order — call record_access first"
-            )
+    def warm_state(self, fname: str):
+        """Host (numpy) copy of a WARM instance's resolved tree, or None
+        when the function is not warm on this node — the catalog uses it to
+        re-snapshot live state without a disk restore."""
         inst = self.instance(fname)
-        state = None
-        if inst is not None:
-            with inst.cond:  # check + pin atomically (cf. record_access)
-                if inst.state is InstanceState.WARM:
-                    tree = inst.tree
-                    inst.inflight += 1
-                else:
-                    tree = None
-            if tree is not None:
-                try:
-                    state = jax.tree.map(np.asarray, tree)
-                finally:
-                    with inst.cond:
-                        inst.inflight -= 1
-                        inst.cond.notify_all()
-        if state is None:
-            restorer = SpiceRestorer(
-                pool=self.pool, node_cache=self.node_cache,
-                pipelined=False, iosched=self.iosched,
-            )
-            state, _, _, _ = restorer.restore(spec.jif_path)
-        stats = snapshot(
-            state,
-            spec.jif_path,
-            base=self.node_cache.get(spec.base_image),
-            access_order=order,
-            working_set=order,
-            meta={"arch": spec.arch, "function": fname, "relayout": True},
-            memory=self.memory,  # rewrite copy charged as scratch
-        )
-        self._bump("relayouts")
-        return stats
+        if inst is None:
+            return None
+        try:
+            with inst.pinned_warm_tree() as tree:
+                return jax.tree.map(np.asarray, tree)
+        except NotWarmError:
+            # ONLY the not-warm signal falls back; a failure materializing
+            # the pinned tree is a real error and must surface
+            return None
 
     # ------------------------------------------------------------ internals
     def _get_instance(self, fname: str, spec, cfg) -> FunctionInstance:
@@ -498,6 +505,17 @@ class NodeScheduler:
             return inst
 
     def _invoke(
+        self, fname, prompt, max_new_tokens, mode, cfg, simulate_read_bw, t_submit
+    ) -> InvokeResult:
+        try:
+            return self._invoke_inner(
+                fname, prompt, max_new_tokens, mode, cfg, simulate_read_bw, t_submit
+            )
+        finally:
+            with self._slock:
+                self._pending -= 1
+
+    def _invoke_inner(
         self, fname, prompt, max_new_tokens, mode, cfg, simulate_read_bw, t_submit
     ) -> InvokeResult:
         from repro.configs import get_config
@@ -548,7 +566,7 @@ class NodeScheduler:
                 self._bump("warm_hits")
                 return InvokeResult(
                     toks, cold=False, mode="warm", ttft_s=ttft, total_s=dt,
-                    function=fname, queue_s=queue_s,
+                    function=fname, queue_s=queue_s, node=self.name,
                 )
             if role == "joined":
                 toks, ttft = generate(cfg, getter, tree, prompt, max_new_tokens)
@@ -556,7 +574,7 @@ class NodeScheduler:
                 self._bump("joined_restores")
                 return InvokeResult(
                     toks, cold=True, mode=mode, ttft_s=ttft, total_s=dt,
-                    function=fname, queue_s=queue_s, joined=True,
+                    function=fname, queue_s=queue_s, joined=True, node=self.name,
                 )
 
             # ------------------------------------------------- owner (cold)
@@ -621,7 +639,7 @@ class NodeScheduler:
                 ttft_s=restore_wait + ttft,  # time-to-first-token from request
                 total_s=total,
                 stats=stats.as_dict() if stats else None,
-                function=fname, queue_s=queue_s,
+                function=fname, queue_s=queue_s, node=self.name,
             )
         finally:
             with inst.cond:

@@ -116,6 +116,36 @@ def test_warm_ttl_expiry_takes_cold_path(tmp_path):
     np.testing.assert_array_equal(r1.tokens, r3.tokens)
 
 
+def test_background_reaper_evicts_idle_expired_instance(tmp_path):
+    """Regression: reap_expired only ran inside _enforce_budget, so an
+    expired warm instance on an IDLE node held its ledger bytes forever.
+    The background reaper must evict it — and release its ledger regions —
+    without any further invocation arriving."""
+    cfg = get_config(ARCH).reduced()
+    params = lm.init_params(cfg, jax.random.PRNGKey(13), jnp.float32)
+    node = ServerlessNode(reap_interval_s=0.05)
+    try:
+        node.publish("reap-fn", cfg, params, str(tmp_path), warm_ttl_s=0.3,
+                     formats=("jif",))
+        r = node.invoke("reap-fn", PROMPT, max_new_tokens=2, mode="spice", cfg=cfg)
+        assert r.cold
+        node.scheduler.drain_residual()
+        inst = node.scheduler.instance("reap-fn")
+        assert inst.state is InstanceState.WARM
+        assert node.memory.kind_bytes()["working_set"] > 0
+        # NO further invocations: only the reaper thread can evict it
+        deadline = time.time() + 5
+        while time.time() < deadline and inst.state is not InstanceState.EVICTED:
+            time.sleep(0.02)
+        assert inst.state is InstanceState.EVICTED
+        assert node.scheduler.stats["ttl_evictions"] >= 1
+        kinds = node.memory.kind_bytes()
+        assert kinds["working_set"] == 0 and kinds["residual"] == 0
+        node.memory.audit()
+    finally:
+        node.scheduler.stop_reaper()
+
+
 def test_lru_eviction_under_memory_budget(tmp_path):
     """A tight node budget keeps only the most recently used instances
     warm; older ones are LRU-evicted."""
@@ -194,14 +224,14 @@ def test_record_access_then_relayout(tmp_path):
     r1 = node.invoke("rl-fn", PROMPT, max_new_tokens=3, mode="spice", cfg=cfg)
     assert r1.cold
 
-    order = node.scheduler.record_access("rl-fn", PROMPT, max_new_tokens=2, cfg=cfg)
+    order = node.record_access("rl-fn", PROMPT, max_new_tokens=2, cfg=cfg)
     assert order
-    assert node.scheduler.recorded_order("rl-fn") == order
+    assert node.catalog.recorded_order("rl-fn") == order
 
-    stats = node.scheduler.relayout("rl-fn")
+    stats = node.relayout("rl-fn")
     assert stats.ws_boundary > 0
     assert stats.ws_tensors == len(order)
-    assert node.scheduler.stats["relayouts"] == 1
+    assert node.catalog.stats["relayouts"] == 1
     with JifReader(node.registry.get("rl-fn").jif_path) as r:
         assert r.version == 2
         assert r.meta["access_order"][: len(order)] == order
