@@ -23,12 +23,11 @@ into ``BENCH_coldstart.json`` under the ``"cluster"`` key.
 from __future__ import annotations
 
 import dataclasses
-import os
 import tempfile
 
 import numpy as np
 
-from benchmarks.common import PROMPT
+from benchmarks.common import PROMPT, smoke
 
 # merged into BENCH_coldstart.json (written by benchmarks/run.py)
 BENCH_TARGET = "coldstart"
@@ -42,7 +41,7 @@ SIM_READ_BW = 2e8  # mid-tier NVMe: cold restores are visibly slower than warm
 
 
 def _smoke() -> bool:
-    return os.environ.get("BENCH_SMOKE", "") not in ("", "0")
+    return smoke()
 
 
 def _cfg():
@@ -159,6 +158,7 @@ def _run_policy(catalog, cfg, policy, fnames, schedule, rows):
         n.name: n.stats["cold_starts"] for n in router.nodes
     }
 
+    router.close()  # idempotent teardown: drains queues, stops reapers
     p50 = float(np.percentile(ttfts, 50))
     p99 = float(np.percentile(ttfts, 99))
     rows.append((f"cluster/{tag}/ttft_p50", p50 * 1e6, ""))
@@ -200,6 +200,7 @@ def _scale_out_probe(catalog, cfg, fnames, rows):
         fut.result()
     router.drain_residual()
     router.audit()
+    router.close()
     replicas = router.replicas(f)
     rows.append(("cluster/scale_out/replicas", float(len(replicas)), ""))
     SUMMARY["scale_out"] = {

@@ -25,6 +25,12 @@ from repro.serve.engine import ServerlessNode, layerwise_state
 BENCH_DIR = Path(__file__).resolve().parents[1] / "results" / "bench_fns"
 
 
+def smoke() -> bool:
+    """True in CI's BENCH_SMOKE=1 regime (one shared definition: the
+    modules must agree on what smoke mode means)."""
+    return os.environ.get("BENCH_SMOKE", "") not in ("", "0")
+
+
 def _jif_version(path: Path) -> int:
     """Peek a cached image's format version (0 if unreadable)."""
     try:

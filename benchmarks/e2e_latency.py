@@ -17,12 +17,11 @@ subsystem (tracked in ``BENCH_coldstart.json`` at the repo root):
 from __future__ import annotations
 
 import dataclasses
-import os
 import tempfile
 
 import numpy as np
 
-from benchmarks.common import PROMPT, build_zoo, fn_config
+from benchmarks.common import PROMPT, build_zoo, fn_config, smoke
 
 MODES = ["spice", "criu_star", "reap_star", "faasnap_star"]
 
@@ -32,7 +31,7 @@ SUMMARY: dict = {}
 
 
 def _smoke() -> bool:
-    return os.environ.get("BENCH_SMOKE", "") not in ("", "0")
+    return smoke()
 
 
 def _coldstart_rows(node, fnames, rows):

@@ -1,0 +1,302 @@
+"""QoS scenario: open-loop mixed workload — a LATENCY zipf head against a
+BATCH tail over 3 nodes — measuring what the typed invocation surface buys.
+
+The schedule is deterministic (seeded): LATENCY-class requests hit a small
+set of hot functions (zipf-weighted, kept warm by keep-alive), BATCH-class
+requests sweep a tail of cold functions (no keep-alive — every invocation
+is a fresh restore) through the same nodes, I/O arbiter, and ledgers, at
+simulated NVMe bandwidth.  Arrivals are open-loop: submitted at schedule
+time without waiting, so queues actually form and admission control, the
+QoS-ordered run queue, and QoS-weighted stream priorities all matter.
+
+Roughly half of the BATCH invocations are cancelled mid-restore (a watcher
+cancels once the RESTORING event is recorded): the benchmark asserts the
+per-node ledgers audit clean afterwards — aborted streams must return
+every reservation.
+
+Reported per class: TTFT p50/p99 (submit → first token: queue wait +
+restore wait + generation), the queue/restore split, rejection rate, and
+cancellation counts.  Asserted (the PR's acceptance bar): LATENCY p99 ≤
+0.5 × BATCH p99, ≥ 25% of BATCH invocations cancelled mid-restore, zero
+audit failures.  Merges into ``BENCH_coldstart.json`` under ``"qos"``.
+"""
+from __future__ import annotations
+
+import tempfile
+import threading
+import time
+
+import numpy as np
+
+from benchmarks.common import PROMPT, smoke
+
+BENCH_TARGET = "coldstart"
+SUMMARY_KEY = "qos"
+SUMMARY: dict = {}
+
+N_NODES = 3
+N_HOT = 2     # LATENCY zipf head (kept warm)
+ZIPF_S = 1.1
+SIM_READ_BW = 1.5e8
+CANCEL_FRAC = 0.6  # fraction of BATCH arrivals a watcher cancels mid-restore
+
+
+def _n_tail() -> int:
+    # BATCH tail (warm_ttl=0: always a cold restore).  The full run uses a
+    # wider tail so arrivals of one function rarely overlap — an overlapped
+    # arrival JOINS the in-flight restore, and a join both serves without a
+    # fresh restore and (correctly) blocks the owner's cancellation.
+    return 6 if _smoke() else 16
+
+
+def _smoke() -> bool:
+    return smoke()
+
+
+def _cfg():
+    import dataclasses
+
+    from repro.configs import get_config
+
+    cfg = get_config("qwen1.5-0.5b").reduced()
+    if not _smoke():
+        cfg = dataclasses.replace(
+            cfg, pattern_reps=8, n_layers=8, d_model=256, d_ff=512, head_dim=32
+        )
+    return cfg
+
+
+def _publish(catalog, cfg, dirpath):
+    import jax
+
+    from repro.models import lm
+
+    hot, tail = [], []
+    n_tail = _n_tail()
+    extra = {"opt": np.ones((1 << 20,), np.float32)}  # 4 MB residual tail
+    for i in range(N_HOT + n_tail):
+        params = lm.init_params(cfg, jax.random.PRNGKey(200 + i))
+        fname = f"hot-{i}" if i < N_HOT else f"tail-{i - N_HOT}"
+        ttl = 3600.0 if i < N_HOT else 0.0
+        catalog.publish(fname, cfg, params, dirpath, warm_ttl_s=ttl,
+                        formats=("jif",), extra_state=extra)
+        (hot if i < N_HOT else tail).append(fname)
+    return hot, tail
+
+
+def _build_cluster(catalog):
+    from repro.serve.cluster import ClusterRouter, LocalityFirst
+    from repro.serve.invocation import AdmissionController
+    from repro.serve.node import NodeScheduler
+
+    nodes = [
+        NodeScheduler(
+            registry=catalog.registry,
+            name=f"node{i}",
+            max_workers=12,
+            admission=AdmissionController(max_queue_depth=64,
+                                          max_batch_queued=24,
+                                          max_batch_inflight=4),
+        )
+        for i in range(N_NODES)
+    ]
+    return ClusterRouter(catalog, nodes, placement=LocalityFirst(),
+                         latency_spill_depth=4)
+
+
+def _schedule(hot, tail, n_lat, n_batch, span_s):
+    """Deterministic open-loop arrival list: (t, qos, fname, cancel)."""
+    from repro.serve.invocation import QosClass
+
+    rng = np.random.default_rng(42)
+    w = 1.0 / np.arange(1, len(hot) + 1) ** ZIPF_S
+    p = w / w.sum()
+    arrivals = []
+    for t in np.sort(rng.uniform(0, span_s, size=n_lat)):
+        fname = hot[int(rng.choice(len(hot), p=p))]
+        arrivals.append((float(t), QosClass.LATENCY, fname, False))
+    for k, t in enumerate(np.sort(rng.uniform(0, span_s, size=n_batch))):
+        fname = tail[k % len(tail)]
+        arrivals.append((float(t), QosClass.BATCH, fname,
+                         rng.random() < CANCEL_FRAC))
+    arrivals.sort(key=lambda a: a[0])
+    return arrivals
+
+
+def _cancel_when_restoring(handle, counters, lock):
+    """Watcher: cancel as soon as the invocation owns a restore (RESTORING
+    recorded); a queued cancel (never ran) is counted separately."""
+    from repro.serve.invocation import EVT_RESTORING
+
+    deadline = time.time() + 30
+    while time.time() < deadline and not handle.done():
+        if any(e == EVT_RESTORING for e, _ in handle.events()):
+            break
+        time.sleep(0.001)
+    restoring = any(e == EVT_RESTORING for e, _ in handle.events())
+    if handle.cancel():
+        with lock:
+            counters["midrestore" if restoring else "queued"] += 1
+
+
+def run() -> list:
+    from repro.serve.cluster import FunctionCatalog
+    from repro.serve.invocation import (
+        DeadlineExceeded,
+        Invocation,
+        InvocationCancelled,
+        Overloaded,
+        QosClass,
+        deadline_in,
+    )
+    from repro.serve.node import NodeScheduler
+
+    cfg = _cfg()
+    n_lat, n_batch, span = (40, 24, 1.5) if _smoke() else (120, 96, 8.0)
+    rows: list = []
+    SUMMARY.clear()
+
+    with tempfile.TemporaryDirectory() as d:
+        catalog = FunctionCatalog()
+        hot, tail = _publish(catalog, cfg, d)
+        # compile-cache warmup on a throwaway node (shared jit cache)
+        warm_node = NodeScheduler(registry=catalog.registry)
+        warm_node.invoke(hot[0], PROMPT, max_new_tokens=2, mode="spice_sync",
+                         cfg=cfg)
+        router = _build_cluster(catalog)
+        # seed the zipf head warm through the router (sticky placement)
+        for f in hot:
+            router.invoke(f, PROMPT, max_new_tokens=2, cfg=cfg,
+                          simulate_read_bw=SIM_READ_BW)
+        router.drain_residual()
+
+        arrivals = _schedule(hot, tail, n_lat, n_batch, span)
+        handles = []      # (qos, fname, handle)
+        rejected = {QosClass.LATENCY: 0, QosClass.BATCH: 0}
+        cancel_counters = {"midrestore": 0, "queued": 0}
+        clock = threading.Lock()
+        watchers = []
+        t0 = time.perf_counter()
+        for t_arr, qos, fname, cancel in arrivals:
+            delay = t_arr - (time.perf_counter() - t0)
+            if delay > 0:
+                time.sleep(delay)
+            inv = Invocation(
+                function=fname, prompt=PROMPT, max_new_tokens=2, cfg=cfg,
+                simulate_read_bw=SIM_READ_BW, qos=qos,
+                deadline_s=deadline_in(30.0) if qos is QosClass.LATENCY else None,
+            )
+            try:
+                h = router.submit_invocation(inv)
+            except (Overloaded, DeadlineExceeded):
+                rejected[qos] += 1
+                continue
+            handles.append((qos, fname, h))
+            if cancel:
+                w = threading.Thread(target=_cancel_when_restoring,
+                                     args=(h, cancel_counters, clock),
+                                     daemon=True)
+                w.start()
+                watchers.append(w)
+
+        per_class = {
+            QosClass.LATENCY: {"ok": [], "cancelled": 0, "failed": 0,
+                               "deadline_expired": 0},
+            QosClass.BATCH: {"ok": [], "cancelled": 0, "failed": 0,
+                             "deadline_expired": 0},
+        }
+        for qos, fname, h in handles:
+            try:
+                per_class[qos]["ok"].append(h.result(120))
+            except InvocationCancelled:
+                per_class[qos]["cancelled"] += 1
+            except DeadlineExceeded:
+                # admitted, expired in queue: NOT an admission rejection
+                per_class[qos]["deadline_expired"] += 1
+            except Exception:
+                per_class[qos]["failed"] += 1
+        for w in watchers:
+            w.join(30)
+        router.drain_residual()
+
+        # ledger cleanliness after mass cancellation: every node must audit
+        audit_failures = 0
+        for n in router.nodes:
+            try:
+                n.memory.audit()
+            except AssertionError:
+                audit_failures += 1
+        hw = {n.name: n.memory.high_water() for n in router.nodes}
+        node_stats = {n.name: dict(n.stats) for n in router.nodes}
+        router.close()
+
+    def _cls(qos):
+        res = per_class[qos]["ok"]
+        ttfts = [r.queue_wait_s + r.ttft_s for r in res]
+        sub = sum(1 for q, _, _ in handles if q is qos) + rejected[qos]
+        return {
+            "submitted": sub,
+            "ok": len(res),
+            "rejected": rejected[qos],
+            "cancelled": per_class[qos]["cancelled"],
+            "deadline_expired": per_class[qos]["deadline_expired"],
+            "failed": per_class[qos]["failed"],
+            "ttft_p50_s": float(np.percentile(ttfts, 50)) if ttfts else None,
+            "ttft_p99_s": float(np.percentile(ttfts, 99)) if ttfts else None,
+            "queue_wait_mean_s": float(np.mean([r.queue_wait_s for r in res]))
+            if res else None,
+            "restore_wait_mean_s": float(np.mean([r.restore_wait_s for r in res]))
+            if res else None,
+            "warm": sum(1 for r in res if not r.cold),
+            "cold": sum(1 for r in res if r.cold and not r.joined),
+            "joined": sum(1 for r in res if r.joined),
+        }
+
+    lat, bat = _cls(QosClass.LATENCY), _cls(QosClass.BATCH)
+    ratio = (
+        lat["ttft_p99_s"] / max(bat["ttft_p99_s"], 1e-12)
+        if lat["ttft_p99_s"] is not None and bat["ttft_p99_s"] is not None
+        else float("nan")
+    )
+    submitted = lat["submitted"] + bat["submitted"]
+    rejected_total = lat["rejected"] + bat["rejected"]
+    SUMMARY.update({
+        "nodes": N_NODES,
+        "latency_functions": N_HOT,
+        "batch_functions": _n_tail(),
+        "span_s": span,
+        "sim_read_bw": SIM_READ_BW,
+        "classes": {"latency": lat, "batch": bat},
+        "latency_vs_batch_p99": ratio,
+        "rejection_rate": rejected_total / max(submitted, 1),
+        "batch_cancelled_midrestore": cancel_counters["midrestore"],
+        "batch_cancelled_queued": cancel_counters["queued"],
+        "audit_failures": audit_failures,
+        "per_node_high_water_bytes": hw,
+        "per_node_stats": {
+            name: {k: s[k] for k in ("cancellations", "rejected_overloaded",
+                                     "rejected_deadline", "cold_starts",
+                                     "warm_hits")}
+            for name, s in node_stats.items()
+        },
+    })
+    rows.append(("qos/latency_ttft_p99", (lat["ttft_p99_s"] or 0) * 1e6, ""))
+    rows.append(("qos/batch_ttft_p99", (bat["ttft_p99_s"] or 0) * 1e6, ""))
+    rows.append(("qos/latency_vs_batch_p99", ratio, "x (must be <=0.5)"))
+    rows.append(("qos/rejection_rate", SUMMARY["rejection_rate"], "frac"))
+    rows.append(("qos/batch_cancelled_midrestore",
+                 float(cancel_counters["midrestore"]), ""))
+
+    # ---- the PR's acceptance bar, enforced where the numbers are made ----
+    assert audit_failures == 0, "ledger audit failed after mass cancellation"
+    assert lat["ttft_p99_s"] is not None and bat["ttft_p99_s"] is not None
+    assert ratio <= 0.5, (
+        f"LATENCY p99 {lat['ttft_p99_s']:.4f}s must be <= 0.5x BATCH p99 "
+        f"{bat['ttft_p99_s']:.4f}s (got {ratio:.3f})"
+    )
+    batch_admitted = bat["submitted"] - bat["rejected"]
+    assert cancel_counters["midrestore"] >= 0.25 * batch_admitted, (
+        f"only {cancel_counters['midrestore']} of {batch_admitted} admitted "
+        "BATCH invocations were cancelled mid-restore (need >= 25%)"
+    )
+    return rows

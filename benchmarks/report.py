@@ -166,6 +166,38 @@ def coldstart_tables(d) -> str:
                 f"{so['replicas']} after burst ({so['scale_outs']} scale-outs)"
             )
         out.append("")
+    qos = d.get("qos")
+    if qos:
+        out += [
+            "#### QoS classes "
+            f"({qos.get('latency_functions', '?')} LATENCY fns warm / "
+            f"{qos.get('batch_functions', '?')} BATCH fns cold / "
+            f"{qos.get('nodes', '?')} nodes, open loop)",
+            "",
+            "| class | ok | rejected | cancelled | p50 ttft (ms) |"
+            " p99 ttft (ms) | queue wait (ms) | restore wait (ms) |",
+            "|---|---|---|---|---|---|---|---|",
+        ]
+        for cname, c in sorted(qos.get("classes", {}).items()):
+            def ms(v):
+                return "—" if v is None else f"{v*1e3:.2f}"
+            out.append(
+                f"| {cname} | {c['ok']} | {c['rejected']} | {c['cancelled']} | "
+                f"{ms(c['ttft_p50_s'])} | {ms(c['ttft_p99_s'])} | "
+                f"{ms(c['queue_wait_mean_s'])} | {ms(c['restore_wait_mean_s'])} |"
+            )
+        ratio = qos.get("latency_vs_batch_p99")
+        if ratio is not None:
+            out.append("")
+            out.append(
+                f"LATENCY p99 / BATCH p99 = **{ratio:.3f}** (must be <=0.5); "
+                f"{qos.get('batch_cancelled_midrestore', 0)} BATCH invocations "
+                f"cancelled mid-restore with "
+                f"{qos.get('audit_failures', '?')} ledger-audit failures"
+            )
+        if qos.get("error"):
+            out.append(f"**SCENARIO FAILED**: {qos['error']}")
+        out.append("")
     return "\n".join(out) if out else "_no BENCH_coldstart.json data_"
 
 

@@ -8,6 +8,7 @@ Prints ``name,us_per_call,derived`` CSV. Module map:
   ablation          -> Fig 11          (restore optimizations, incremental)
   concurrency       -> Fig 12 (+Fig 3 interference) (burst max latency)
   cluster           -> N-node placement policies (locality vs baselines)
+  qos               -> Invocation API v2: LATENCY vs BATCH open-loop mix
   roofline          -> EXPERIMENTS.md §Roofline (from dry-run artifacts)
 
 ``e2e_latency`` additionally drops ``BENCH_coldstart.json`` at the repo
@@ -35,6 +36,7 @@ MODULES = [
     "ablation",
     "concurrency",
     "cluster",
+    "qos",
     "roofline",
 ]
 
@@ -70,19 +72,27 @@ def main() -> None:
     failures = 0
     for name in mods:
         t0 = time.time()
+        mod = error = None
         try:
             mod = __import__(f"benchmarks.{name}", fromlist=["run"])
             for row in mod.run():
                 n, us, derived = row
                 print(f"{n},{us:.1f},{derived}")
-            summary = getattr(mod, "SUMMARY", None)
-            if summary:
-                out = _write_summary(name, mod, summary)
-                print(f"# wrote {out}", flush=True)
         except Exception as e:
             failures += 1
+            error = f"{type(e).__name__}: {e}"
             print(f"{name},nan,ERROR:{type(e).__name__}:{e}", flush=True)
             traceback.print_exc(file=sys.stderr)
+        # a failed scenario must be VISIBLY failed, not silently absent:
+        # whatever partial SUMMARY it accumulated is written, stamped with
+        # the error, and the harness exits non-zero below
+        summary = getattr(mod, "SUMMARY", None) if mod is not None else None
+        if error is not None:
+            summary = dict(summary or {})
+            summary["error"] = error
+        if summary:
+            out = _write_summary(name, mod, summary)
+            print(f"# wrote {out}", flush=True)
         print(f"# {name} finished in {time.time()-t0:.1f}s", flush=True)
     if failures:
         raise SystemExit(f"{failures} benchmark modules failed")

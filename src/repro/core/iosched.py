@@ -222,13 +222,21 @@ class PrefetchIOScheduler:
 
     # --------------------------------------------------------------- loop
     def _pick_stream(self) -> Optional[IOStream]:
-        """Under lock: demand-boosted first (FIFO), else priority + RR."""
-        while self._boosted:
-            s, job = self._boosted[0]
+        """Under lock: demand-boosted first — QoS-weighted: among live
+        boost entries the highest-priority STREAM wins (a LATENCY restore's
+        demand overtakes a BATCH restore's earlier demand), FIFO within a
+        tier — else stream priority + RR."""
+        best = None
+        for entry in list(self._boosted):
+            s, job = entry
             # entry expires once the demanded job left the queue (I/O done)
-            if s._by_name.get(job.name) is job and s._has_work():
-                return s
-            self._boosted.popleft()
+            if s._by_name.get(job.name) is not job or not s._has_work():
+                self._boosted.remove(entry)
+                continue
+            if best is None or s.priority > best.priority:
+                best = s
+        if best is not None:
+            return best
         ready = [s for s in self._streams if s._has_work()]
         if not ready:
             return None

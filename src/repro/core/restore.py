@@ -158,7 +158,10 @@ class TensorHandle:
         return self._ev.is_set()
 
 
-BACKGROUND_PRIORITY = -1  # residual streams yield to fresh demand streams
+# Residual tails yield to every demand stream — including BATCH-class
+# restores, whose streams open at -1 (see repro.serve.invocation.QosClass
+# .io_priority): demanded bytes of any class beat advisory background fill.
+BACKGROUND_PRIORITY = -2
 
 
 class SpiceRestorer:
@@ -197,6 +200,10 @@ class SpiceRestorer:
         # node scheduler transfers these onto the FunctionInstance, which
         # releases them on eviction (restorers are per-restore on that path)
         self.regions: Tuple[Optional[MemoryRegion], Optional[MemoryRegion]] = (None, None)
+        # the LAST restore() call's live prefetch stream: the node holds it
+        # to abort a cancelled invocation mid-restore (stream.abort fails
+        # every handle and returns the admitted regions via on_complete)
+        self.stream: Optional[IOStream] = None
 
     # ------------------------------------------------------------------
     def restore(
@@ -429,6 +436,7 @@ class SpiceRestorer:
             _release_regions()
             r.close()
             raise
+        self.stream = stream
 
         def on_complete():
             if stream.error is not None:

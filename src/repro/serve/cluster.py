@@ -45,7 +45,6 @@ from __future__ import annotations
 
 import os
 import threading
-from concurrent.futures import Future
 from typing import Any, Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
@@ -63,6 +62,12 @@ from repro.core.memory import NodeMemoryManager
 from repro.core.snapshot import SnapshotStats
 from repro.core.trace import trace_access_order
 from repro.serve.instance import generate, layerwise_state
+from repro.serve.invocation import (
+    Invocation,
+    InvocationHandle,
+    Overloaded,
+    QosClass,
+)
 from repro.serve.node import InvokeResult, NodeLoad, NodeScheduler
 
 __all__ = [
@@ -316,6 +321,24 @@ class PlacementPolicy:
     ) -> int:
         raise NotImplementedError
 
+    def place_urgent(
+        self, spec: FunctionSpec, key: Optional[str], loads: Sequence[NodeLoad]
+    ) -> int:
+        """Deadline/LATENCY-aware placement: where ``place`` optimizes for
+        locality or fairness, ``place_urgent`` optimizes for time-to-first-
+        token NOW — a warm-holding node with a shallow queue beats a
+        locality match behind a deep one.  Default: warm first, then
+        least-loaded; policies may override."""
+        return min(
+            range(len(loads)),
+            key=lambda i: (
+                spec.name not in loads[i].warm,
+                loads[i].queue_depth,
+                loads[i].pending_io_bytes,
+                loads[i].pressure,
+            ),
+        )
+
     @staticmethod
     def _least_loaded(loads: Sequence[NodeLoad]) -> int:
         return min(
@@ -375,6 +398,12 @@ class RoundRobin(PlacementPolicy):
             self._next += 1
         return idx
 
+    def place_urgent(self, spec, key, loads):
+        # the base-class default ranks loads — but round-robin never probes
+        # (needs_loads=False), so every load is an identical placeholder
+        # and min() would pin ALL urgent traffic to node 0; keep rotating
+        return self.place(spec, key, loads)
+
 
 class LeastLoaded(PlacementPolicy):
     """Pure load balancing: ignore snapshot locality entirely."""
@@ -401,7 +430,14 @@ class ClusterRouter:
         nodes: Sequence[NodeScheduler],
         placement: Optional[PlacementPolicy] = None,
         scale_out_queue_depth: Optional[int] = None,
+        latency_spill_depth: int = 2,
+        urgent_deadline_s: float = 1.0,
     ):
+        """``latency_spill_depth``: an urgent invocation (LATENCY class, or
+        a deadline within ``urgent_deadline_s``) whose sticky replica has
+        this many invocations in flight steals a replica on the node
+        ``place_urgent`` picks instead of queueing — BATCH work waits where
+        LATENCY work scales out."""
         if not nodes:
             raise ValueError("a cluster needs at least one node")
         self.catalog = catalog
@@ -421,9 +457,12 @@ class ClusterRouter:
             raise ValueError(f"node names must be unique, got {names}")
         self.placement = placement or LocalityFirst()
         self.scale_out_queue_depth = scale_out_queue_depth
+        self.latency_spill_depth = latency_spill_depth
+        self.urgent_deadline_s = urgent_deadline_s
         self._lock = threading.Lock()
+        self._closed = False
         self._assign: Dict[str, List[int]] = {}  # sticky fname -> node idxs
-        self.stats = {"routed": 0, "scale_outs": 0}
+        self.stats = {"routed": 0, "scale_outs": 0, "latency_steals": 0}
 
     # ------------------------------------------------------------- routing
     def _probe(self) -> List[NodeLoad]:
@@ -431,13 +470,24 @@ class ClusterRouter:
             return [n.load() for n in self.nodes]
         return [_EMPTY_LOAD] * len(self.nodes)
 
-    def _pick(self, fname: str) -> int:
+    def _urgent(self, inv: Optional[Invocation]) -> bool:
+        """LATENCY class, or a deadline tighter than ``urgent_deadline_s``:
+        the invocations deadline-aware placement treats as urgent."""
+        if inv is None:
+            return False
+        if inv.qos is QosClass.LATENCY:
+            return True
+        remaining = inv.remaining_s()
+        return remaining is not None and remaining < self.urgent_deadline_s
+
+    def _pick(self, fname: str, inv: Optional[Invocation] = None) -> int:
         """Load probes run OUTSIDE the router lock (each takes several node
         locks; serializing all routing through them would bottleneck the
         burst regime).  The lock only guards the sticky replica map —
         probes may be a beat stale, which placement tolerates (it ranks)."""
         spec = self.catalog.registry.get(fname)
         key = self.catalog.locality_key(fname)
+        urgent = self._urgent(inv)
         with self._lock:
             self.stats["routed"] += 1
             assigned = (
@@ -445,7 +495,8 @@ class ClusterRouter:
                 else None
             )
         if assigned is None:  # non-sticky: place every request independently
-            return self.placement.place(spec, key, self._probe())
+            place = self.placement.place_urgent if urgent else self.placement.place
+            return place(spec, key, self._probe())
         if not assigned:
             idx = self.placement.place(spec, key, self._probe())
             with self._lock:
@@ -460,27 +511,54 @@ class ClusterRouter:
             assigned,
             key=lambda i: (loads[i].queue_depth, loads[i].pressure),
         )
+        if urgent and len(assigned) < len(self.nodes) \
+                and loads[idx].urgent_depth >= self.latency_spill_depth:
+            # deadline-aware steal: the least-loaded replica is backed up
+            # with work the QoS queue cannot dispatch past (urgent_depth
+            # discounts parked BATCH occupancy) and this invocation cannot
+            # wait — grow a replica where place_urgent points (a BATCH
+            # invocation queues instead)
+            return self._grow_replica(
+                fname, spec, key, assigned, idx, urgent=True
+            )
         if (
             self.scale_out_queue_depth is not None
+            and (inv is None or inv.qos is not QosClass.BATCH)
             and len(assigned) < len(self.nodes)
             and loads[idx].queue_depth >= self.scale_out_queue_depth
         ):
             # opt-in scale-out: the least-loaded replica is still backed
-            # up — place one more replica by the same policy
-            rest = [i for i in range(len(self.nodes)) if i not in assigned]
-            rest_loads = (
-                [self.nodes[i].load() for i in rest]
-                if self.placement.needs_loads
-                else [_EMPTY_LOAD] * len(rest)
+            # up — place one more replica by the same policy.  BATCH-class
+            # invocations never trigger it: background work waits.
+            return self._grow_replica(
+                fname, spec, key, assigned, idx, urgent=False
             )
-            new = rest[self.placement.place(spec, key, rest_loads)]
-            with self._lock:
-                current = self._assign.setdefault(fname, [idx])
-                if new not in current and len(current) < len(self.nodes):
-                    current.append(new)
-                    self.stats["scale_outs"] += 1
-                    idx = new
         return idx
+
+    def _grow_replica(self, fname, spec, key, assigned, idx, urgent) -> int:
+        rest = [i for i in range(len(self.nodes)) if i not in assigned]
+        rest_loads = (
+            [self.nodes[i].load() for i in rest]
+            if self.placement.needs_loads
+            else [_EMPTY_LOAD] * len(rest)
+        )
+        place = self.placement.place_urgent if urgent else self.placement.place
+        new = rest[place(spec, key, rest_loads)]
+        with self._lock:
+            current = self._assign.setdefault(fname, [idx])
+            if new not in current and len(current) < len(self.nodes):
+                current.append(new)
+                self.stats["latency_steals" if urgent else "scale_outs"] += 1
+                idx = new
+        return idx
+
+    def submit_invocation(self, inv: Invocation) -> InvocationHandle:
+        """Typed front door: place by QoS/deadline, admit on the chosen
+        node (typed ``Overloaded`` / ``DeadlineExceeded`` raise here)."""
+        if self._closed:
+            raise Overloaded("router is closed")
+        idx = self._pick(inv.function, inv)
+        return self.nodes[idx].submit_invocation(inv)
 
     def submit(
         self,
@@ -490,11 +568,12 @@ class ClusterRouter:
         mode: str = "spice",
         cfg: Optional[ModelConfig] = None,
         simulate_read_bw: Optional[float] = None,
-    ) -> "Future[InvokeResult]":
-        idx = self._pick(fname)
-        return self.nodes[idx].submit(
-            fname, prompt, max_new_tokens, mode, cfg, simulate_read_bw
-        )
+    ) -> InvocationHandle:
+        """Legacy surface: a STANDARD-class :class:`Invocation` wrapper."""
+        return self.submit_invocation(Invocation(
+            function=fname, prompt=prompt, max_new_tokens=max_new_tokens,
+            mode=mode, cfg=cfg, simulate_read_bw=simulate_read_bw,
+        ))
 
     def invoke(self, *args, **kwargs) -> InvokeResult:
         return self.submit(*args, **kwargs).result()
@@ -531,11 +610,17 @@ class ClusterRouter:
         return {n.name: n.memory.audit() for n in self.nodes}
 
     def close(self) -> None:
-        """Explicit fleet teardown: stop every node's background reaper.
-        (Reaper threads also exit on GC — they only weakref their node —
-        so this is for deterministic shutdown, not leak avoidance.)"""
+        """Idempotent fleet teardown: refuse new work, then close every
+        node — each stops its reaper and drains its admission queue with
+        typed :class:`Overloaded` rejections, so teardown can never hang on
+        queued BATCH work.  In-flight invocations finish; their handles
+        resolve normally.  Safe to call any number of times."""
+        with self._lock:
+            if self._closed:
+                return
+            self._closed = True
         for n in self.nodes:
-            n.stop_reaper()
+            n.close()
 
     # ---------------------------------------------- control-plane passthrough
     def _warm_node(self, fname: str) -> Optional[NodeScheduler]:

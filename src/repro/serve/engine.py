@@ -39,6 +39,17 @@ from repro.serve.instance import (  # re-exported: public serving helpers
     wait_tree,
 )
 from repro.serve.instance import wait_tree as _wait_tree  # legacy alias
+from repro.serve.invocation import (  # re-exported: the typed request surface
+    AdmissionController,
+    DeadlineExceeded,
+    Invocation,
+    InvocationCancelled,
+    InvocationError,
+    InvocationHandle,
+    Overloaded,
+    QosClass,
+    deadline_in,
+)
 from repro.serve.node import (
     FixedTTLPolicy,
     InvokeResult,
@@ -53,6 +64,15 @@ __all__ = [
     "NodeScheduler",
     "NodeLoad",
     "InvokeResult",
+    "Invocation",
+    "InvocationHandle",
+    "QosClass",
+    "AdmissionController",
+    "InvocationError",
+    "Overloaded",
+    "DeadlineExceeded",
+    "InvocationCancelled",
+    "deadline_in",
     "KeepAlivePolicy",
     "FixedTTLPolicy",
     "NoKeepAlive",
@@ -155,6 +175,13 @@ class ServerlessNode:
 
     def submit(self, *args, **kwargs):
         return self._router.submit(*args, **kwargs)
+
+    def submit_invocation(self, inv: Invocation) -> InvocationHandle:
+        """The typed v2 surface (QoS class, deadline, cancellation)."""
+        return self._router.submit_invocation(inv)
+
+    def close(self) -> None:
+        self._router.close()
 
     def evict(self, fname: Optional[str] = None) -> None:
         self._sched.evict(fname)

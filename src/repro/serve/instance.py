@@ -253,6 +253,20 @@ class FunctionInstance:
     def idle(self) -> bool:
         return self.inflight == 0
 
+    def restore_abortable(self, generation: int) -> bool:
+        """True while restore ``generation`` may still be aborted by a
+        cancellation: the instance is RESTORING that same generation and no
+        joiner shares the handle tree (``inflight`` > 1 means concurrent
+        invocations trusted the stream — aborting it would fail them for
+        someone else's cancel).  Once the working set lands (WARMING/WARM)
+        cancellation is a no-op by contract."""
+        with self.cond:
+            return (
+                self.state is InstanceState.RESTORING
+                and self.generation == generation
+                and self.inflight <= 1
+            )
+
     @contextlib.contextmanager
     def pinned_warm_tree(self):
         """Check-and-pin a WARM instance's tree atomically: yields the tree

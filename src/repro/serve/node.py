@@ -31,10 +31,11 @@ the snapshot — the paper's single-population guarantee per node.
 from __future__ import annotations
 
 import dataclasses
+import heapq
 import threading
 import time
-from concurrent.futures import Future, ThreadPoolExecutor
-from typing import Dict, FrozenSet, List, Optional
+from concurrent.futures import ThreadPoolExecutor
+from typing import Dict, FrozenSet, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -57,6 +58,20 @@ from repro.core.memory import (
 )
 from repro.core.restore import RestoreStats
 from repro.core.trace import AccessRecorder
+from repro.serve.invocation import (
+    EVT_ADMITTED,
+    EVT_PLACED,
+    EVT_RESTORING,
+    EVT_RUNNING,
+    EVT_WS_READY,
+    AdmissionController,
+    DeadlineExceeded,
+    Invocation,
+    InvocationCancelled,
+    InvocationHandle,
+    Overloaded,
+    QosClass,
+)
 from repro.core.treeutil import unflatten_state
 from repro.serve.instance import (
     FunctionInstance,
@@ -83,6 +98,14 @@ class InvokeResult:
     queue_s: float = 0.0  # admission delay in the node's invoke pool
     joined: bool = False  # rode an in-flight restore instead of starting one
     node: str = ""  # serving node's name ("" on single-node paths)
+    qos: str = "standard"  # QosClass.value of the request
+    # derived from the handle's event timeline (time.monotonic() domain):
+    # queue_wait_s splits queueing delay from restore delay in benchmarks
+    queue_wait_s: float = 0.0   # ADMITTED -> first work on the request
+    admitted_ts: float = 0.0    # monotonic timestamps of the named events
+    placed_ts: float = 0.0
+    running_ts: float = 0.0
+    timeline: Optional[List[Tuple[str, float]]] = None  # full event list
 
 
 @dataclasses.dataclass(frozen=True)
@@ -102,6 +125,29 @@ class NodeLoad:
     restoring: FrozenSet[str] = frozenset()  # RESTORING (joinable) names
     images: FrozenSet[str] = frozenset()     # resident base-image names
     warm_bytes: int = 0
+    batch_inflight: int = 0  # BATCH-class admitted (queued + running)
+    urgent_depth: int = 0    # QUEUED non-BATCH invocations: the backlog an
+    # urgent (LATENCY) arrival actually waits behind in the run queue.
+    # Queued BATCH work is excluded (the QoS dispatcher jumps past it);
+    # running work of any class is excluded too — worker occupancy is the
+    # admission controller's problem (max_batch_inflight), and counting it
+    # here made urgent placement steal replicas that queue-priority alone
+    # would have served warm.  Under genuine worker saturation the queued
+    # urgent arrivals themselves grow this number, so the spill still
+    # fires after ~latency_spill_depth of them.
+
+
+def _cancel_collateral(exc: BaseException) -> bool:
+    """True when ``exc`` was caused by SOMEONE ELSE cancelling the restore
+    this invocation merely rode (the cause chain bottoms out in
+    InvocationCancelled): the rider is innocent and may retry once."""
+    seen = set()
+    while exc is not None and id(exc) not in seen:
+        if isinstance(exc, InvocationCancelled):
+            return True
+        seen.add(id(exc))
+        exc = exc.__cause__ or exc.__context__
+    return False
 
 
 # ------------------------------------------------------------ keep-alive
@@ -159,6 +205,7 @@ class NodeScheduler:
         memory: Optional[NodeMemoryManager] = None,
         name: str = "",
         reap_interval_s: Optional[float] = None,
+        admission: Optional[AdmissionController] = None,
     ):
         self.name = name
         self.registry = registry or FunctionRegistry()
@@ -195,6 +242,17 @@ class NodeScheduler:
         # invocations submitted but not finished (queued + running): the
         # cluster router's queue-depth signal
         self._pending = 0
+        # QoS-ordered run queue: the pool's workers pull the best admitted
+        # invocation (class rank, then priority, then earliest deadline,
+        # then FIFO) instead of raw submission order
+        self.admission = admission or AdmissionController()
+        self._queue: List[Tuple] = []  # heap of (rank,-prio,deadline,seq,t,handle)
+        self._queued = 0        # entries in the heap (not yet claimed)
+        self._batch_queued = 0  # BATCH entries in the heap
+        self._batch_active = 0  # BATCH admitted (queued + running)
+        self._fn_active: Dict[str, int] = {}  # per-fn admitted (queued+running)
+        self._seq = 0
+        self._closed = False
         self._reaper_stop: Optional[threading.Event] = None
         self.reap_interval_s = reap_interval_s
         self.stats = {
@@ -207,6 +265,9 @@ class NodeScheduler:
             "ws_promotions": 0,
             "residual_evictions": 0,
             "ws_rerestores": 0,
+            "rejected_overloaded": 0,
+            "rejected_deadline": 0,
+            "cancellations": 0,
         }
         if reap_interval_s is not None:
             self.start_reaper(reap_interval_s)
@@ -238,6 +299,68 @@ class NodeScheduler:
         self.memory.budget = nbytes
 
     # --------------------------------------------------------------- invoke
+    def submit_invocation(self, inv: Invocation,
+                          handle: Optional[InvocationHandle] = None,
+                          ) -> InvocationHandle:
+        """Admit a typed :class:`Invocation` into the node's QoS-ordered
+        run queue.  Admission-time refusals RAISE (typed
+        :class:`Overloaded` / :class:`DeadlineExceeded`); anything after
+        admission resolves through the returned handle."""
+        fname = inv.function
+        if handle is None:
+            handle = InvocationHandle(inv, node=self.name)
+        else:
+            handle.node = self.name
+        if inv.deadline_s is not None and time.monotonic() >= inv.deadline_s:
+            self._bump("rejected_deadline")
+            raise DeadlineExceeded(f"{fname}: deadline already passed at submit")
+        t_submit = time.perf_counter()
+        with self._slock:
+            if self._closed:
+                raise Overloaded(f"node {self.name or 'node'!r} is closed")
+            try:
+                self.admission.admit(
+                    inv, queued=self._queued,
+                    fn_active=self._fn_active.get(fname, 0),
+                    batch_queued=self._batch_queued,
+                    batch_active=self._batch_active,
+                )
+            except Overloaded:
+                self.stats["rejected_overloaded"] += 1
+                raise
+            self._pending += 1
+            self._queued += 1
+            if inv.qos is QosClass.BATCH:
+                self._batch_queued += 1
+                self._batch_active += 1
+            self._fn_active[fname] = self._fn_active.get(fname, 0) + 1
+            seq = self._seq
+            self._seq += 1
+            # record BEFORE the entry becomes poppable: a free worker may
+            # claim it the instant the lock drops, and the timeline must
+            # still read ADMITTED -> PLACED -> <work>
+            handle.record(EVT_ADMITTED)
+            handle.record(EVT_PLACED)
+            heapq.heappush(self._queue, (
+                inv.qos.dispatch_rank, -inv.priority,
+                inv.deadline_s if inv.deadline_s is not None else float("inf"),
+                seq, t_submit, handle,
+            ))
+        try:
+            self._exec.submit(self._drain_one)
+        except BaseException:
+            # raced a close(): the admission check above passed before the
+            # flag flipped, so the entry is either in the queue close() is
+            # draining (typed rejection incoming) or already claimed by a
+            # worker — either way the handle resolves; return it instead
+            # of surfacing the executor's untyped RuntimeError.  _retire
+            # is idempotent, so the doubled return cannot skew the caps.
+            self._retire(handle)
+            if handle._done_ev.wait(5.0):
+                return handle
+            raise
+        return handle
+
     def submit(
         self,
         fname: str,
@@ -246,20 +369,14 @@ class NodeScheduler:
         mode: str = "spice",
         cfg: Optional[ModelConfig] = None,
         simulate_read_bw: Optional[float] = None,
-    ) -> "Future[InvokeResult]":
-        """Admit an invocation into the node's worker pool."""
-        t_submit = time.perf_counter()
-        with self._slock:
-            self._pending += 1
-        try:
-            return self._exec.submit(
-                self._invoke, fname, prompt, max_new_tokens, mode, cfg,
-                simulate_read_bw, t_submit,
-            )
-        except BaseException:
-            with self._slock:
-                self._pending -= 1
-            raise
+    ) -> InvocationHandle:
+        """Legacy surface: a thin wrapper building a STANDARD-class
+        :class:`Invocation` (the returned handle duck-types the Future the
+        old surface handed back)."""
+        return self.submit_invocation(Invocation(
+            function=fname, prompt=prompt, max_new_tokens=max_new_tokens,
+            mode=mode, cfg=cfg, simulate_read_bw=simulate_read_bw,
+        ))
 
     def invoke(
         self,
@@ -273,6 +390,113 @@ class NodeScheduler:
         return self.submit(
             fname, prompt, max_new_tokens, mode, cfg, simulate_read_bw
         ).result()
+
+    def _retire(self, handle: InvocationHandle) -> None:
+        """Return one admitted invocation's counters (dispatch done, or the
+        enqueue failed after admission).  Idempotent per handle: a racing
+        ``close()`` and a failed enqueue may both try to retire the same
+        admission, and returning it twice would corrupt the caps."""
+        fname = handle.invocation.function
+        with self._slock:
+            if handle._retired:
+                return
+            handle._retired = True
+            self._pending -= 1
+            if handle.invocation.qos is QosClass.BATCH:
+                self._batch_active -= 1
+            left = self._fn_active.get(fname, 0) - 1
+            if left > 0:
+                self._fn_active[fname] = left
+            else:
+                self._fn_active.pop(fname, None)
+
+    def _drain_one(self) -> None:
+        """Worker-pool entry: claim the best queued invocation and run it.
+        One `_drain_one` is scheduled per enqueue, so the heap is non-empty
+        unless `close()` drained it first."""
+        with self._slock:
+            if not self._queue:
+                return  # close() rejected the queued work already
+            _, _, _, _, t_submit, handle = heapq.heappop(self._queue)
+            self._queued -= 1
+            if handle.invocation.qos is QosClass.BATCH:
+                self._batch_queued -= 1
+        inv = handle.invocation
+        try:
+            if not handle._claim_for_run():
+                self._bump("cancellations")
+                handle._finish_cancelled(InvocationCancelled(
+                    f"{inv.function}: cancelled while queued"
+                ))
+                return
+            if inv.deadline_s is not None and time.monotonic() >= inv.deadline_s:
+                self._bump("rejected_deadline")
+                handle._finish_rejected(DeadlineExceeded(
+                    f"{inv.function}: deadline passed after "
+                    f"{time.perf_counter() - t_submit:.3f}s in queue"
+                ))
+                return
+            result = None
+            for attempt in range(3):
+                try:
+                    result = self._invoke_inner(inv, handle, t_submit)
+                    break
+                except BaseException as exc:
+                    if handle.cancel_requested:
+                        self._bump("cancellations")
+                        handle._finish_cancelled(InvocationCancelled(
+                            f"{inv.function}: cancelled mid-restore"
+                        ))
+                        return
+                    if attempt < 2 and _cancel_collateral(exc):
+                        # rode a restore someone ELSE cancelled: this
+                        # invocation is innocent — restore afresh (under a
+                        # cancellation wave the retry itself may join
+                        # another doomed restore, hence more than one).
+                        # Re-open the phase machine so the retry is
+                        # cancellable again.
+                        handle._reset_for_retry()
+                        continue
+                    raise
+            result.qos = inv.qos.value
+            result.queue_wait_s = handle.queue_wait_s()
+            result.admitted_ts = handle.event_ts(EVT_ADMITTED) or 0.0
+            result.placed_ts = handle.event_ts(EVT_PLACED) or 0.0
+            result.running_ts = handle.event_ts(EVT_RUNNING) or 0.0
+            result.timeline = handle.events()
+            handle._finish_ok(result)
+        except BaseException as exc:  # noqa: BLE001 — typed via the handle
+            handle._finish_failed(exc)
+        finally:
+            self._retire(handle)
+
+    # ------------------------------------------------------------- teardown
+    def close(self) -> None:
+        """Idempotent node shutdown: stop the reaper, refuse new work, and
+        drain the admission queue with typed rejections so queued BATCH
+        work cannot hang fleet teardown.  Running invocations finish."""
+        with self._slock:
+            if self._closed:
+                return
+            self._closed = True
+            drained = [entry[-1] for entry in self._queue]
+            self._queue.clear()
+            self._queued = 0
+            self._batch_queued = 0
+        self.stop_reaper()
+        for handle in drained:
+            if handle.cancel_requested:
+                self._bump("cancellations")
+                handle._finish_cancelled(InvocationCancelled(
+                    f"{handle.invocation.function}: cancelled while queued"
+                ))
+            else:
+                self._bump("rejected_overloaded")
+                handle._finish_rejected(Overloaded(
+                    f"node {self.name or 'node'!r}: shutting down"
+                ))
+            self._retire(handle)
+        self._exec.shutdown(wait=False)
 
     # ------------------------------------------------------------- eviction
     def evict(self, fname: Optional[str] = None, timeout: float = 30.0) -> None:
@@ -353,6 +577,8 @@ class NodeScheduler:
         """The placement probe surface (see :class:`NodeLoad`)."""
         with self._slock:
             queue_depth = self._pending
+            batch_inflight = self._batch_active
+            urgent_depth = max(0, self._queued - self._batch_queued)
         with self._ilock:
             insts = list(self._instances.items())
         warm = frozenset(
@@ -376,6 +602,8 @@ class NodeScheduler:
             restoring=restoring,
             images=self.node_cache.resident_names(),
             warm_bytes=warm_bytes,
+            batch_inflight=batch_inflight,
+            urgent_depth=urgent_depth,
         )
 
     def warm_bytes(self) -> int:
@@ -504,24 +732,16 @@ class NodeScheduler:
                 inst = self._instances[fname] = FunctionInstance(spec, cfg)
             return inst
 
-    def _invoke(
-        self, fname, prompt, max_new_tokens, mode, cfg, simulate_read_bw, t_submit
-    ) -> InvokeResult:
-        try:
-            return self._invoke_inner(
-                fname, prompt, max_new_tokens, mode, cfg, simulate_read_bw, t_submit
-            )
-        finally:
-            with self._slock:
-                self._pending -= 1
-
     def _invoke_inner(
-        self, fname, prompt, max_new_tokens, mode, cfg, simulate_read_bw, t_submit
+        self, inv: Invocation, handle: InvocationHandle, t_submit: float
     ) -> InvokeResult:
         from repro.configs import get_config
 
+        fname = inv.function
+        prompt, max_new_tokens = inv.prompt, inv.max_new_tokens
+        mode = inv.mode
         spec = self.registry.get(fname)
-        cfg = cfg or get_config(spec.arch)
+        cfg = inv.cfg or get_config(spec.arch)
         t0 = time.perf_counter()
         queue_s = t0 - t_submit
         self._bump("invocations")
@@ -561,6 +781,9 @@ class NodeScheduler:
 
         try:
             if role == "warm":
+                handle._pin()  # state resident: cancel is a no-op from here
+                handle.record(EVT_WS_READY)
+                handle.record(EVT_RUNNING)
                 toks, ttft = generate(cfg, getter, tree, prompt, max_new_tokens)
                 dt = time.perf_counter() - t0
                 self._bump("warm_hits")
@@ -569,6 +792,11 @@ class NodeScheduler:
                     function=fname, queue_s=queue_s, node=self.name,
                 )
             if role == "joined":
+                handle._pin()  # joiners ride a shared stream: not abortable
+                handle.record(EVT_RESTORING)
+                if inst.ws_ready:
+                    handle.record(EVT_WS_READY)
+                handle.record(EVT_RUNNING)
                 toks, ttft = generate(cfg, getter, tree, prompt, max_new_tokens)
                 dt = time.perf_counter() - t0
                 self._bump("joined_restores")
@@ -582,17 +810,39 @@ class NodeScheduler:
             # must not strand the instance in RESTORING: abort releases
             # joiners and makes the next invocation restore afresh
             try:
+                handle.record(EVT_RESTORING)
                 if preloaded:
                     self._bump("ws_rerestores")
+
+                def _ws_ready():  # fired by the restorer (prefetcher thread)
+                    handle.record(EVT_WS_READY)
+                    handle._pin()
+
                 # pinned_region rides along: the spice restorer resizes it
                 # in place into the new ws region, so the resident pinned
                 # bytes stay charged across the re-restore
-                state, stats, getter, regions = self._cold_restore(
-                    spec, mode, simulate_read_bw, preloaded, pinned_region
+                state, stats, getter, regions, stream = self._cold_restore(
+                    spec, mode, inv.simulate_read_bw, preloaded, pinned_region,
+                    io_priority=inv.qos.io_priority, on_working_set=_ws_ready,
                 )
                 with inst.cond:
                     inst.publish_restore(state, getter, stats, regions)
+                    generation = inst.generation
+                if stream is not None:
+                    # arm mid-restore cancellation: aborts the stream (which
+                    # releases every ledger reservation through the restore
+                    # failure paths) iff no joiner shares the handle tree
+                    handle._attach_canceller(
+                        self._restore_canceller(inst, stream, generation)
+                    )
+                else:
+                    # synchronous restore: baseline modes never fire the
+                    # callback; spice_sync already did (don't re-record)
+                    handle._pin()
+                    if handle.event_ts(EVT_WS_READY) is None:
+                        handle.record(EVT_WS_READY)
                 restore_wait = time.perf_counter() - t0  # sync restore part
+                handle.record(EVT_RUNNING)
                 toks, ttft = generate(cfg, getter, state, prompt, max_new_tokens)
                 ttl = self.keepalive.ttl_for(spec)
                 now = time.time()
@@ -735,15 +985,38 @@ class NodeScheduler:
                     self._bump("lru_evictions")
         return freed
 
+    def _restore_canceller(self, inst: FunctionInstance, stream, generation: int):
+        """Build the mid-restore cancel hook for one restore generation:
+        abort the prefetch stream (failing its handles and returning every
+        ledger reservation through the restore's existing failure paths) —
+        but only while this invocation is the restore's SOLE rider, so a
+        cancel never fails joiners that trusted the shared tree."""
+
+        def cancel() -> bool:
+            if not inst.restore_abortable(generation):
+                return False
+            stream.abort(InvocationCancelled(
+                f"{inst.spec.name}: invocation cancelled mid-restore"
+            ))
+            # abort() no-ops on a completed stream: only report success
+            # when the stream actually died with our cancellation
+            return isinstance(stream.error, InvocationCancelled)
+
+        return cancel
+
     def _cold_restore(self, spec: FunctionSpec, mode: str, sim_bw=None,
-                      preloaded=None, pinned_region=None):
-        """Returns (state, stats, getter, (ws_region, residual_region)).
-        Spice restores reserve their regions up front through the node
-        ledger — a restore that cannot fit fails fast (MemoryPressureError)
-        or triggers the reclaim ladder instead of over-committing.
-        ``pinned_region`` (a residual-evicted instance's retained ws
-        charge) transfers into the spice restore's ws region; baseline
-        modes re-read everything, so it is released here."""
+                      preloaded=None, pinned_region=None, io_priority: int = 0,
+                      on_working_set=None):
+        """Returns (state, stats, getter, (ws_region, residual_region),
+        stream).  Spice restores reserve their regions up front through the
+        node ledger — a restore that cannot fit fails fast
+        (MemoryPressureError) or triggers the reclaim ladder instead of
+        over-committing.  ``pinned_region`` (a residual-evicted instance's
+        retained ws charge) transfers into the spice restore's ws region;
+        baseline modes re-read everything, so it is released here.
+        ``io_priority`` (the QoS class's stream priority) ranks this
+        restore's reads at the shared arbiter; ``stream`` is the live
+        prefetch stream for cancellation (None for baseline modes)."""
         if pinned_region is not None and mode not in ("spice", "spice_sync"):
             pinned_region.release()
             pinned_region = None
@@ -758,35 +1031,38 @@ class NodeScheduler:
                 pool=self.pool, node_cache=self.node_cache,
                 transform=install, simulate_read_bw=sim_bw,
                 iosched=self.iosched, memory=self.memory,
+                stream_priority=io_priority,
             )
             state, meta, handles, stats = restorer.restore(
                 spec.jif_path, wait=False, preloaded=preloaded,
-                preloaded_region=pinned_region,
+                preloaded_region=pinned_region, on_working_set=on_working_set,
             )
-            return state, stats, wait_tree, restorer.regions
+            return state, stats, wait_tree, restorer.regions, restorer.stream
         if mode == "spice_sync":
             restorer = SpiceRestorer(
                 pool=self.pool, node_cache=self.node_cache, pipelined=False,
                 transform=install, simulate_read_bw=sim_bw,
                 iosched=self.iosched, memory=self.memory,
+                stream_priority=io_priority,
             )
             state, meta, handles, stats = restorer.restore(
                 spec.jif_path, wait=True, preloaded=preloaded,
-                preloaded_region=pinned_region,
+                preloaded_region=pinned_region, on_working_set=on_working_set,
             )
-            return state, stats, None, restorer.regions
+            # inline stream already drained: nothing left to cancel
+            return state, stats, None, restorer.regions, None
         if mode == "criu_star":
             state, stats = baselines.criu_star_restore(
                 spec.jif_path.replace(".jif", ".criu"), simulate_read_bw=sim_bw
             )
             state = jax.tree.map(install, state)
-            return state, stats, None, (self._charge_baseline(spec, state), None)
+            return state, stats, None, (self._charge_baseline(spec, state), None), None
         if mode == "reap_star":
             state, stats = baselines.reap_star_restore(
                 spec.jif_path.replace(".jif", ".mono"), simulate_read_bw=sim_bw
             )
             state = jax.tree.map(install, state)
-            return state, stats, None, (self._charge_baseline(spec, state), None)
+            return state, stats, None, (self._charge_baseline(spec, state), None), None
         if mode == "faasnap_star":
             r = baselines.FaasnapAsyncRestorer(
                 spec.jif_path.replace(".jif", ".mono"), simulate_read_bw=sim_bw
@@ -798,7 +1074,7 @@ class NodeScheduler:
                 if not t["name"].startswith("__extra__/")
             }
             state = unflatten_state(r.r.header["tree"], leaves)
-            return state, r.stats, faasnap_wait, (None, None)
+            return state, r.stats, faasnap_wait, (None, None), None
         raise ValueError(f"unknown restore mode {mode!r}")
 
     def _charge_baseline(self, spec: FunctionSpec, state):
