@@ -70,9 +70,11 @@ FUNCTIONS: List[Tuple[str, str]] = [
 ]
 
 
-def build_zoo(force: bool = False) -> ServerlessNode:
-    """Publish the zoo once (cached on disk); rebuild the node each call."""
-    node = ServerlessNode()
+def build_zoo(force: bool = False, **node_kwargs) -> ServerlessNode:
+    """Publish the zoo once (cached on disk); rebuild the node each call.
+    ``node_kwargs`` reach the underlying :class:`NodeScheduler` (e.g.
+    ``install="fused"`` to benchmark the device-restore fast path)."""
+    node = ServerlessNode(**node_kwargs)
     BENCH_DIR.mkdir(parents=True, exist_ok=True)
 
     # one shared base per arch: functions of the same arch dedup against it

@@ -198,6 +198,54 @@ def coldstart_tables(d) -> str:
         if qos.get("error"):
             out.append(f"**SCENARIO FAILED**: {qos['error']}")
         out.append("")
+    dr = d.get("device_restore")
+    if dr:
+        full = dr.get("full_image", {})
+        if full:
+            out += [
+                "#### Device-restore fast path (storage roofline "
+                f"{dr.get('sim_read_bw', 0)/1e6:.0f} MB/s)",
+                "",
+                "| install path | wall (ms) | read (MB) | achieved (MB/s) |"
+                " roofline frac | upload wait (s) | uploaded (MB) |",
+                "|---|---|---|---|---|---|---|",
+            ]
+            for label in ("eager", "fused"):
+                r = full.get(label)
+                if not r:
+                    continue
+                out.append(
+                    f"| {label} | {r['wall_s']*1e3:.1f} | "
+                    f"{r['bytes_read']/1e6:.1f} | {r['achieved_bw']/1e6:.1f} | "
+                    f"{r['roofline_frac']:.3f} | {r['upload_s']:.3f} | "
+                    f"{r['uploaded_bytes']/1e6:.1f} |"
+                )
+            out.append("")
+        de = dr.get("delta")
+        if de:
+            out += [
+                f"- delta upload economics: **{de['upload_vs_full']:.3f}** of "
+                f"full-image bytes crossed to device "
+                f"({de['uploaded_bytes']/1e6:.1f} MB of "
+                f"{de['full_bytes']/1e6:.1f} MB), identical to eager: "
+                f"**{de['identical']}**",
+                f"- device base resident: {de['device_base_resident_bytes']/1e6:.1f} MB "
+                f"({de['device_cache_hits']} hits / {de['device_cache_misses']} "
+                f"builds), ledger audit ok: **{de['audit_ok']}**",
+                "",
+            ]
+        tt = dr.get("ttft")
+        if tt:
+            out += [
+                f"- cold-start TTFT eager {tt['eager_s']*1e3:.1f} ms vs fused "
+                f"{tt['fused_s']*1e3:.1f} ms (ratio "
+                f"**{tt['fused_vs_eager']:.3f}**, must be <=1); "
+                f"{dr.get('audit_failures', '?')} ledger-audit failures",
+                "",
+            ]
+        if dr.get("error"):
+            out.append(f"**SCENARIO FAILED**: {dr['error']}")
+            out.append("")
     return "\n".join(out) if out else "_no BENCH_coldstart.json data_"
 
 

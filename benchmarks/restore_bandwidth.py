@@ -1,0 +1,289 @@
+"""Device-restore bandwidth: does restore speed track the storage roofline?
+
+Three scenarios, merged into ``BENCH_coldstart.json`` under
+``"device_restore"``:
+
+* ``full_image`` — restore a full (no-parent) snapshot under a simulated
+  storage bandwidth and compare achieved restore GB/s against that
+  roofline.  The eager path serializes per-tensor device installs on the
+  prefetcher thread (reads stall behind copies — measurably below the
+  roofline); the fused path hands installs to the UploadStream, so reads
+  and uploads overlap and the wall clock tracks the storage roofline
+  (target: >= 0.8x at full size).
+* ``delta`` — a ~25%-dirty fine-tune restored through the device fast
+  path must upload only its private pages (<= 0.35x of the full image's
+  bytes) while staying byte-identical to the eagerly-restored tree; a
+  second restore against the now-resident device base re-uploads nothing
+  base-resident.
+* ``ttft`` — node-level cold-start TTFT, eager vs fused install policy
+  (same zoo function, same simulated bandwidth).  CI asserts
+  fused <= eager and zero ledger audit failures.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import PROMPT, build_zoo, fn_config, smoke
+from repro.core import (
+    BufferPool,
+    NodeImageCache,
+    NodeMemoryManager,
+    SpiceRestorer,
+    snapshot,
+)
+from repro.core.treeutil import flatten_state
+from repro.core.upload import DeviceImageCache, DevicePath, UploadStream
+
+BENCH_TARGET = "coldstart"
+SUMMARY_KEY = "device_restore"
+SUMMARY: dict = {}
+
+# simulated storage roofline (bytes/s): slow enough that read sleeps
+# dominate compute jitter (CPU contention between the uploader, the
+# prefetcher, and the model's forward pass), fast enough to finish in CI
+SIM_READ_BW = 75e6
+# simulated host->device interconnect roofline (bytes/s).  On this
+# container the jax backend is CPU, where a "device install" is a memcpy —
+# without a modeled transfer cost both paths degenerate to host copies and
+# the comparison measures nothing.  The sim charges each path for the
+# bytes it actually moves: full tensors for eager (serialized on the
+# prefetcher thread), private pages only for fused (overlapped on the
+# upload ring)
+SIM_UPLOAD_BW = 150e6
+
+
+def _eager_install(a):
+    """The eager baseline's per-tensor install under the same interconnect
+    roofline the fused path's UploadStream simulates."""
+    time.sleep(a.nbytes / SIM_UPLOAD_BW)
+    return jnp.array(a, copy=True)
+
+
+def _state(n_tensors: int, tensor_mb: int, zeros_mb: int, seed=7):
+    rng = np.random.default_rng(seed)
+    st = {}
+    elems = tensor_mb * (1 << 20) // 4
+    for i in range(n_tensors):
+        st[f"w{i:02d}"] = jnp.asarray(
+            rng.standard_normal(elems).astype(np.float32)
+        )
+    if zeros_mb:
+        st["scratch"] = jnp.zeros((zeros_mb * (1 << 20) // 4,), jnp.float32)
+    return st
+
+
+def _restore_wall(path, *, device: bool, pool, repeats: int):
+    """Min-of-repeats wall clock for a complete restore (uploads landed).
+    Each repeat uses fresh restorer state but shares the pool (steady-state
+    staging, like a warm node) and, for the device path, a fresh upload
+    ring + device cache (full images carry no BASE pages, so nothing
+    persists between repeats anyway)."""
+    best = float("inf")
+    stats = None
+    for _ in range(repeats):
+        cache = NodeImageCache()
+        if device:
+            up = UploadStream(simulate_bw=SIM_UPLOAD_BW)
+            dpath = DevicePath(upload=up, images=DeviceImageCache())
+            r = SpiceRestorer(
+                pool=pool, node_cache=cache, device_path=dpath,
+                simulate_read_bw=SIM_READ_BW,
+            )
+        else:
+            up = None
+            r = SpiceRestorer(
+                pool=pool, node_cache=cache, transform=_eager_install,
+                simulate_read_bw=SIM_READ_BW,
+            )
+        t0 = time.perf_counter()
+        state, _, handles, st = r.restore(path, wait=True)
+        jax.block_until_ready([h._arr for h in handles.values()])
+        wall = time.perf_counter() - t0
+        if up is not None:
+            up.close()
+        r.iosched.shutdown()
+        if wall < best:
+            best, stats = wall, st
+    return best, stats
+
+
+def _full_image_section(tmp, out):
+    reps = 1 if smoke() else 3
+    n, mb, zmb = (4, 1, 1) if smoke() else (8, 8, 8)
+    st = _state(n, mb, zmb)
+    path = f"{tmp}/full.jif"
+    snapshot(st, path)
+    pool = BufferPool()
+    # untimed warm-up: amortize jit compiles (overlay-patch oracle, install)
+    _restore_wall(path, device=True, pool=pool, repeats=1)
+    _restore_wall(path, device=False, pool=pool, repeats=1)
+    rows = []
+    sect = {}
+    for label, device in (("eager", False), ("fused", True)):
+        wall, stats = _restore_wall(path, device=device, pool=pool, repeats=reps)
+        payload = stats.bytes_read + stats.zero_bytes  # logical restore bytes
+        achieved = stats.bytes_read / wall  # vs the STORAGE roofline
+        frac = achieved / SIM_READ_BW
+        sect[label] = {
+            "wall_s": wall,
+            "bytes_read": stats.bytes_read,
+            "upload_s": stats.upload_s,
+            "uploaded_bytes": stats.uploaded_bytes,
+            "achieved_bw": achieved,
+            "roofline_frac": frac,
+        }
+        rows.append((
+            f"restore_bandwidth/full/{label}",
+            wall * 1e6,
+            f"bw={achieved/1e6:.1f}MBps,frac={frac:.3f},"
+            f"upload={stats.upload_s:.3f}s,payload={payload/1e6:.1f}MB",
+        ))
+    sect["image_bytes"] = int(sum(
+        np.asarray(a).nbytes for a in jax.tree.leaves(st)
+    ))
+    out["full_image"] = sect
+    if not smoke():
+        # acceptance: fused tracks the storage roofline, eager sits below it
+        assert sect["fused"]["roofline_frac"] >= 0.8, sect
+        assert sect["eager"]["roofline_frac"] < sect["fused"]["roofline_frac"], sect
+    return rows
+
+
+def _delta_section(tmp, out):
+    n, mb = (4, 1) if smoke() else (8, 8)
+    base_st = _state(n, mb, zeros_mb=0, seed=11)
+    ft = dict(base_st)
+    # dirty ~25% of every tensor (leading quarter, page-aligned at this size)
+    for k in list(ft):
+        a = np.array(ft[k])
+        cut = a.size // 4
+        a[:cut] += 0.5
+        ft[k] = jnp.asarray(a)
+    parent = f"{tmp}/parent.jif"
+    delta = f"{tmp}/delta.jif"
+    snapshot(base_st, parent)
+    dstats = snapshot(ft, delta, parent=parent)
+
+    mem = NodeMemoryManager(4 << 30)
+    cache = NodeImageCache()
+    cache.attach(mem)
+    up = UploadStream()
+    images = DeviceImageCache()
+    images.attach(mem)
+    dpath = DevicePath(upload=up, images=images)
+
+    # reference: eager host-assembled restore of the same delta
+    r_ref = SpiceRestorer(
+        node_cache=cache, transform=lambda a: jnp.array(a, copy=True)
+    )
+    ref_state, _, _, _ = r_ref.restore(delta)
+    r_ref.iosched.shutdown()
+
+    def fused_restore():
+        r = SpiceRestorer(node_cache=cache, device_path=dpath, memory=mem)
+        state, _, _, st = r.restore(delta, wait=True)
+        r.iosched.shutdown()
+        return state, st
+
+    state1, st1 = fused_restore()  # builds the device-resident base
+    stats_mid = images.snapshot_stats()
+    state2, st2 = fused_restore()  # base already HBM-resident
+    full_bytes = sum(np.asarray(a).nbytes for a in jax.tree.leaves(base_st))
+
+    l_ref, _ = flatten_state(ref_state)
+    l_fused, _ = flatten_state(state1)
+    identical = all(
+        np.array_equal(np.asarray(a), np.asarray(b))
+        for (_, a), (_, b) in zip(l_ref, l_fused)
+    )
+    audit_ok = True
+    try:
+        mem.audit()
+    except AssertionError:
+        audit_ok = False
+    hits_after = images.snapshot_stats()
+    out["delta"] = {
+        "full_bytes": int(full_bytes),
+        "delta_private_bytes": int(dstats.private_bytes),
+        "uploaded_bytes": int(st2.uploaded_bytes),
+        "upload_vs_full": st2.uploaded_bytes / full_bytes,
+        "identical": bool(identical),
+        "first_restore_uploaded_bytes": int(st1.uploaded_bytes),
+        "device_base_resident_bytes": images.resident_bytes(),
+        "device_cache_hits": hits_after["hits"],
+        "device_cache_misses": hits_after["misses"],
+        "audit_ok": audit_ok,
+    }
+    up.close()
+    assert identical, "fused delta restore diverged from eager restore"
+    # fused restores move only private pages; the second restore must hit
+    # the resident device base for every BASE tensor (no re-uploads)
+    assert st2.uploaded_bytes <= 0.35 * full_bytes, out["delta"]
+    assert hits_after["misses"] == stats_mid["misses"], (
+        "second restore rebuilt device bases already HBM-resident"
+    )
+    return [(
+        "restore_bandwidth/delta/fused",
+        0.0,
+        f"uploaded={st2.uploaded_bytes/1e6:.1f}MB,"
+        f"full={full_bytes/1e6:.1f}MB,"
+        f"ratio={st2.uploaded_bytes/full_bytes:.3f},identical={identical}",
+    )]
+
+
+def _ttft_section(out):
+    reps = 1 if smoke() else 2
+    sim_bw = SIM_READ_BW
+    fname = "py-hello"
+    cfg = fn_config(fname)
+    audit_failures = 0
+    sect = {}
+    for label, kwargs in (
+        ("eager", {"install": _eager_install}),
+        ("fused", {"install": "fused", "simulate_upload_bw": SIM_UPLOAD_BW}),
+    ):
+        node = build_zoo(**kwargs)
+        best = float("inf")
+        # warm-up invoke compiles the model's forward pass; evict so the
+        # timed invokes are genuinely cold (restore path, warm jit)
+        node.invoke(fname, PROMPT, max_new_tokens=4, mode="spice",
+                    cfg=cfg, simulate_read_bw=sim_bw)
+        for _ in range(reps):
+            node.evict(fname)
+            res = node.invoke(fname, PROMPT, max_new_tokens=4, mode="spice",
+                              cfg=cfg, simulate_read_bw=sim_bw)
+            assert res.cold
+            best = min(best, res.ttft_s)
+        try:
+            node._sched.memory.audit()
+        except AssertionError:
+            audit_failures += 1
+        sect[f"{label}_s"] = best
+        node.close()
+    sect["fused_vs_eager"] = sect["fused_s"] / max(sect["eager_s"], 1e-12)
+    out["ttft"] = sect
+    out["audit_failures"] = audit_failures
+    return [(
+        "restore_bandwidth/ttft",
+        sect["fused_s"] * 1e6,
+        f"eager={sect['eager_s']*1e3:.1f}ms,"
+        f"fused={sect['fused_s']*1e3:.1f}ms,"
+        f"ratio={sect['fused_vs_eager']:.3f},audit_failures={audit_failures}",
+    )]
+
+
+def run() -> list:
+    import tempfile
+
+    rows = []
+    SUMMARY.clear()
+    SUMMARY["sim_read_bw"] = SIM_READ_BW
+    with tempfile.TemporaryDirectory() as tmp:
+        rows += _full_image_section(tmp, SUMMARY)
+        rows += _delta_section(tmp, SUMMARY)
+    rows += _ttft_section(SUMMARY)
+    return rows

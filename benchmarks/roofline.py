@@ -1,24 +1,58 @@
 """Roofline table from the dry-run artifacts (EXPERIMENTS.md §Roofline
-reads this). Reports the three terms per (arch x shape x mesh) cell."""
+reads this). Reports the three terms per (arch x shape x mesh) cell, plus
+the restore-bandwidth roofline (achieved restore GB/s vs the simulated
+storage bandwidth) when ``BENCH_coldstart.json`` carries a
+``device_restore`` section."""
 from __future__ import annotations
 
 import glob
 import json
 from pathlib import Path
 
-RESULTS = Path(__file__).resolve().parents[1] / "results" / "dryrun"
+REPO_ROOT = Path(__file__).resolve().parents[1]
+RESULTS = REPO_ROOT / "results" / "dryrun"
 
 
 def rows_from_disk():
     out = []
     for f in sorted(glob.glob(str(RESULTS / "*.json"))):
+        # sidecar artifacts (HLO dumps, dotted variant stems) are not
+        # roofline cells: skip them
         if ".hlo" in f or "." in Path(f).stem.replace(".json", "").split("__")[-1]:
-            pass
+            continue
         d = json.load(open(f))
         if "skipped" in d or "error" in d or "roofline" not in d:
             continue
         out.append(d)
     return out
+
+
+def restore_bandwidth_rows() -> list:
+    """Storage-roofline view of the device-restore benchmark: achieved
+    restore bandwidth per install path against ``sim_read_bw`` (the
+    simulated storage ceiling both paths read through)."""
+    bench = REPO_ROOT / "BENCH_coldstart.json"
+    if not bench.exists():
+        return []
+    try:
+        d = json.loads(bench.read_text())
+    except json.JSONDecodeError:
+        return []
+    sect = d.get("device_restore") or {}
+    bw = sect.get("sim_read_bw")
+    full = sect.get("full_image") or {}
+    rows = []
+    for label in ("eager", "fused"):
+        r = full.get(label)
+        if not r or not bw:
+            continue
+        rows.append((
+            f"roofline/restore_bandwidth/{label}",
+            r["wall_s"] * 1e6,
+            f"achieved={r['achieved_bw']/1e6:.1f}MBps,"
+            f"roofline={bw/1e6:.1f}MBps,fraction={r['roofline_frac']:.3f}",
+        ))
+    return rows
 
 
 def run() -> list:
@@ -35,4 +69,5 @@ def run() -> list:
         )
     if not rows:
         rows.append(("roofline/none", 0.0, "run launch/dryrun first"))
+    rows += restore_bandwidth_rows()
     return rows

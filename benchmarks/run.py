@@ -9,6 +9,9 @@ Prints ``name,us_per_call,derived`` CSV. Module map:
   concurrency       -> Fig 12 (+Fig 3 interference) (burst max latency)
   cluster           -> N-node placement policies (locality vs baselines)
   qos               -> Invocation API v2: LATENCY vs BATCH open-loop mix
+  restore_bandwidth -> device-restore fast path (upload stream + overlay
+                       patch) vs the storage roofline; merged into
+                       BENCH_coldstart.json under "device_restore"
   roofline          -> EXPERIMENTS.md §Roofline (from dry-run artifacts)
 
 ``e2e_latency`` additionally drops ``BENCH_coldstart.json`` at the repo
@@ -37,6 +40,7 @@ MODULES = [
     "concurrency",
     "cluster",
     "qos",
+    "restore_bandwidth",
     "roofline",
 ]
 

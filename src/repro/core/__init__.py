@@ -12,6 +12,7 @@ from repro.core.overlay import (
 from repro.core.iosched import IOStream, PrefetchIOScheduler
 from repro.core.lifecycle import SnapshotPipeline
 from repro.core.memory import (
+    KIND_DEVICE_IMAGE,
     KIND_IMAGE_CACHE,
     KIND_POOL,
     KIND_RESIDUAL,
@@ -26,6 +27,7 @@ from repro.core.pool import BufferPool
 from repro.core.restore import RestoreStats, SpiceRestorer, TensorHandle
 from repro.core.snapshot import SnapshotStats, snapshot
 from repro.core.registry import FunctionRegistry, FunctionSpec
+from repro.core.upload import DeviceImageCache, DevicePath, UploadStream
 
 __all__ = [
     "SnapshotPipeline",
@@ -38,9 +40,13 @@ __all__ = [
     "MEMORY_KINDS",
     "KIND_POOL",
     "KIND_IMAGE_CACHE",
+    "KIND_DEVICE_IMAGE",
     "KIND_WORKING_SET",
     "KIND_RESIDUAL",
     "KIND_SCRATCH",
+    "UploadStream",
+    "DeviceImageCache",
+    "DevicePath",
     "IOStream",
     "PrefetchIOScheduler",
     "SpiceRestorer",

@@ -94,10 +94,13 @@ class NodeImageCache:
     Attached to a :class:`~repro.core.memory.NodeMemoryManager`, every
     resident image is charged to an ``image_cache`` region and eviction
     becomes a registered *reclaimer* invoked under node memory pressure
-    (rung 1 of the ladder: after residual tails, before warm instances)
-    instead of only a private capacity LRU."""
+    (rung 2 of the ladder: after residual tails and device-resident base
+    pages, before warm instances) instead of only a private capacity LRU."""
 
-    RECLAIM_ORDER = 1  # ladder rung: residual (0) -> image cache -> warm LRU
+    RECLAIM_ORDER = 2  # ladder rung: residual (0) -> device images (1) ->
+    # image cache -> pool staging -> warm LRU.  Host base images outrank
+    # device copies: dropping a device base costs one re-upload from here,
+    # dropping a host base forces a disk re-read (or fails the restore).
 
     def __init__(self, capacity_bytes: int = 8 << 30):
         self.capacity = capacity_bytes
@@ -253,7 +256,7 @@ class NodeImageCache:
         return released
 
     def reclaim(self, nbytes: int, protect=frozenset()) -> int:
-        """Ladder rung 1: evict LRU *recoverable* images until ``nbytes``
+        """Ladder rung 2: evict LRU *recoverable* images until ``nbytes``
         are freed (may drain them all — a restore mid-flight keeps its own
         reference to the base it resolved, and the next miss bootstraps the
         parent back from its JIF).  Pinned images (no disk backing) are

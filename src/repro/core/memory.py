@@ -44,6 +44,7 @@ from typing import Callable, Dict, FrozenSet, Iterable, List, Optional, Tuple
 __all__ = [
     "KIND_POOL",
     "KIND_IMAGE_CACHE",
+    "KIND_DEVICE_IMAGE",
     "KIND_WORKING_SET",
     "KIND_RESIDUAL",
     "KIND_SCRATCH",
@@ -56,12 +57,14 @@ __all__ = [
 # Region kinds — the per-kind ledger columns.
 KIND_POOL = "pool"                # BufferPool free list + outstanding buffers
 KIND_IMAGE_CACHE = "image_cache"  # NodeImageCache resident base images
+KIND_DEVICE_IMAGE = "device_image"  # DeviceImageCache HBM-resident base pages
 KIND_WORKING_SET = "working_set"  # pinned working-set bytes of an instance
 KIND_RESIDUAL = "residual"        # residual (post-ws-boundary) bytes
 KIND_SCRATCH = "scratch"          # transient snapshot/relayout staging
 
 MEMORY_KINDS = (
-    KIND_POOL, KIND_IMAGE_CACHE, KIND_WORKING_SET, KIND_RESIDUAL, KIND_SCRATCH,
+    KIND_POOL, KIND_IMAGE_CACHE, KIND_DEVICE_IMAGE, KIND_WORKING_SET,
+    KIND_RESIDUAL, KIND_SCRATCH,
 )
 
 
@@ -320,7 +323,8 @@ class NodeMemoryManager:
         """Register a reclaimer rung.  ``fn(nbytes, protect)`` frees up to
         ``nbytes`` (by releasing regions) and returns the bytes it freed.
         Lower ``order`` runs first — the node ladder is residual (0) →
-        image-cache (1) → pool staging (2) → LRU warm instances (3)."""
+        device-image (1) → image-cache (2) → pool staging (3) → LRU warm
+        instances (4)."""
         with self._cv:
             self._reclaimers = sorted(
                 [r for r in self._reclaimers if r[1] != name]

@@ -59,6 +59,11 @@ class RestoreStats:
     residual_tensors: int = 0  # tensors streaming after the ws boundary
     reused_bytes: int = 0     # bytes served from a pinned working set
     reused_tensors: int = 0   # tensors served from a pinned working set
+    # device fast path: read-wait and upload-wait split apart so benchmarks
+    # can attribute TTFT to storage vs PCIe/serialization
+    upload_s: float = 0.0             # time spent in host->device transfers
+    uploaded_bytes: int = 0           # bytes that actually crossed to HBM
+    patched_on_device_bytes: int = 0  # tensor bytes materialized by the kernel
     ws_names: Optional[List[str]] = None  # traced working-set tensor names
 
     # Snapshot consistency: the prefetcher mutates counters concurrently
@@ -176,6 +181,7 @@ class SpiceRestorer:
         iosched: Optional[PrefetchIOScheduler] = None,
         stream_priority: int = 0,
         memory: Optional[NodeMemoryManager] = None,
+        device_path=None,
     ):
         """``transform`` runs on the scheduler's reader thread per completed
         tensor (e.g. jnp.asarray = eager device install, off the critical
@@ -186,7 +192,23 @@ class SpiceRestorer:
         ``memory`` is the node ledger: when given, a restore reserves its
         working-set and residual regions up front — a restore that cannot
         fit fails fast (or triggers the reclaim ladder) instead of
-        over-committing the node."""
+        over-committing the node.
+
+        ``device_path`` (a :class:`repro.core.upload.DevicePath`) switches
+        tensor materialization to the device fast path: finalize enqueues
+        uploads onto the node's shared :class:`UploadStream` instead of
+        host-assembling + transforming on the reader thread.  Per tensor,
+        the restore plans either a FUSED restore — only private pages are
+        read (into a compact staging buffer) and uploaded; BASE pages come
+        from the HBM-resident :class:`DeviceImageCache`, ZERO pages are
+        free, and the overlay-patch kernel materializes the full tensor on
+        device — or a full upload (host assembly as usual, whole-tensor
+        upload off the reader thread) when fusion cannot apply: page size
+        not a dtype multiple, all-private itable (nothing to fuse), BASE
+        pages with no device base available (cache miss under pressure, or
+        ``device_path.images is None``).  ``transform`` is ignored for
+        device-path tensors; ``on_ready`` only fires for host-path
+        tensors."""
         self.pool = pool or BufferPool()
         self.node_cache = node_cache or NodeImageCache()
         self.io_chunk_bytes = io_chunk_bytes
@@ -196,6 +218,7 @@ class SpiceRestorer:
         self.iosched = iosched or PrefetchIOScheduler(name="spice-private")
         self.stream_priority = stream_priority
         self.memory = memory
+        self.device_path = device_path
         # (ws_region, residual_region) of the LAST restore() call — the
         # node scheduler transfers these onto the FunctionInstance, which
         # releases them on eviction (restorers are per-restore on that path)
@@ -268,6 +291,23 @@ class SpiceRestorer:
             ):
                 reused[t.name] = arr
 
+        # ---- device fast path: plan fused vs full uploads per tensor -----
+        # Planned NOW (the itables are already resident, zero extra I/O) so
+        # compact staging buffers can be sized before any read is issued.
+        # The first restore against a base pays its one-time device install
+        # here, synchronously; every later restore on the node shares it.
+        dp = self.device_path
+        plans: Dict[str, Any] = {}   # name -> FusedPlan
+        full_upload: set = set()     # device path, whole-tensor upload
+        if dp is not None:
+            try:
+                plans, full_upload = self._plan_device(r, base, reused)
+            except BaseException:
+                if preloaded_region is not None:
+                    preloaded_region.release()
+                r.close()
+                raise
+
         # ---- admission: reserve regions BEFORE any data is staged --------
         region_ws = region_res = None
         if self.memory is not None:
@@ -321,7 +361,15 @@ class SpiceRestorer:
         try:
             for t in r.tensors:
                 handles[t.name] = TensorHandle(t.name, t.shape, t.dtype)
-                if t.name not in reused:
+                if t.name in reused:
+                    continue
+                plan = plans.get(t.name)
+                if plan is not None:
+                    # fused: stage ONLY the private pages, compactly; an
+                    # all-BASE/ZERO tensor needs no staging buffer at all
+                    if plan.n_priv:
+                        buffers[t.name] = self.pool.acquire(plan.priv_bytes)
+                else:
                     buffers[t.name] = self.pool.acquire(t.nbytes)
             ws_remaining = [sum(
                 1 for t in r.tensors if t.name in ws_names and t.name not in reused
@@ -350,21 +398,49 @@ class SpiceRestorer:
 
         def finalize(name: str):
             t = r.by_name[name]
-            arr = buffers[name][: t.nbytes].view(np.dtype(t.dtype))
-            arr = arr.reshape(t.shape) if t.shape else arr.reshape(())
-            if self.transform is not None:  # eager install (e.g. device put)
-                arr = self.transform(arr)
-                # the host staging buffer is no longer referenced: recycle it
-                # into the pool, re-zeroing on THIS (reader) thread —
-                # allocation and zeroing stay off future critical paths
-                self.pool.release(buffers.pop(name), dirty=True)
-            handles[name].set(arr)
+            if dp is not None and (name in plans or name in full_upload):
+                # device path: hand the staged bytes to the upload ring and
+                # return to reading immediately — the device transfer (and,
+                # for fused tensors, the overlay patch) runs on the uploader
+                # thread, overlapped with further reads.  The handle resolves
+                # when the upload lands; upload jobs never touch the reader.
+                rel = partial(self.pool.release, dirty=True)
+                plan = plans.get(name)
+                if plan is not None:
+                    dp.upload.upload_fused(
+                        handles[name], plan, buffers.pop(name, None),
+                        stats=stats, release=rel,
+                    )
+                else:
+                    dp.upload.upload_full(
+                        handles[name], buffers.pop(name),
+                        shape=tuple(t.shape), dtype=t.dtype,
+                        nbytes=t.nbytes, stats=stats, release=rel,
+                    )
+            else:
+                arr = buffers[name][: t.nbytes].view(np.dtype(t.dtype))
+                arr = arr.reshape(t.shape) if t.shape else arr.reshape(())
+                if self.transform is not None:  # eager install (device put)
+                    arr = self.transform(arr)
+                    # PJRT transfers are asynchronous (the source buffer is
+                    # only immutable-until-transfer-completes): an installed
+                    # array must land before its staging buffer is re-zeroed,
+                    # or the device copy reads zeros mid-transfer
+                    ready = getattr(arr, "block_until_ready", None)
+                    if ready is not None:
+                        ready()
+                    # the host staging buffer is no longer referenced:
+                    # recycle it into the pool, re-zeroing on THIS (reader)
+                    # thread — allocation and zeroing stay off future
+                    # critical paths
+                    self.pool.release(buffers.pop(name), dirty=True)
+                handles[name].set(arr)
+                if on_ready is not None:
+                    on_ready(name, arr)
             region = region_ws if name in ws_names else region_res
             if region is not None:
                 region.populate(t.nbytes)
             stats.set_once("first_tensor_s", time.perf_counter() - t0)
-            if on_ready is not None:
-                on_ready(name, arr)
             if name in ws_names:
                 # the stream serves one tensor at a time, so this counter
                 # only ever moves on the serving thread
@@ -413,10 +489,55 @@ class SpiceRestorer:
             stats.add(bytes_read=len(raw), io_ops=1)
             return len(raw)
 
+        def read_compact_op(name: str, src: int, dst_slot: int, count: int) -> int:
+            """Sequential read of private chunks into the COMPACT staging
+            buffer: ``dst_slot`` indexes private-page slots (0..n_priv-1),
+            not tensor pages — the fused tensor never exists on host."""
+            ps = r.page_size
+            raw = r.pread_chunks(src, count)
+            if self.simulate_read_bw:
+                time.sleep(len(raw) / self.simulate_read_bw)
+            dst0 = dst_slot * ps
+            buffers[name][dst0 : dst0 + len(raw)] = np.frombuffer(raw, np.uint8)
+            stats.add(bytes_read=len(raw), io_ops=1)
+            return len(raw)
+
+        def fused_account(name: str) -> int:
+            """Fused tensors pay no host memcpy for BASE/ZERO pages —
+            account the bytes the device tier serves (no storage reads)."""
+            plan = plans[name]
+            t = r.by_name[name]
+            sizes = np.minimum(
+                plan.page_bytes,
+                t.nbytes - np.arange(plan.n_pages, dtype=np.int64) * plan.page_bytes,
+            )
+            nb_base = int(sizes[plan.kinds == overlay.KIND_BASE].sum())
+            nb_zero = int(sizes[plan.kinds == overlay.KIND_ZERO].sum())
+            if nb_base:
+                stats.add(base_bytes=nb_base)
+                if dp.images is not None:
+                    dp.images.note_base_served(nb_base)
+            if nb_zero:
+                stats.add(zero_bytes=nb_zero)
+            return 0
+
         def tensor_ops(name: str) -> List[Callable[[], int]]:
-            ops: List[Callable[[], int]] = [partial(fill_base_zero, name)]
             ps = r.page_size
             chunk = max(self.io_chunk_bytes // ps, 1)
+            plan = plans.get(name)
+            if plan is not None:
+                # fused: read ONLY the private runs, packed compactly
+                ops = [partial(fused_account, name)]
+                for slot, src, count in plan.runs:
+                    done = 0
+                    while done < count:
+                        n = min(count - done, chunk)
+                        ops.append(
+                            partial(read_compact_op, name, src + done, slot + done, n)
+                        )
+                        done += n
+                return ops
+            ops = [partial(fill_base_zero, name)]
             for start, count, src in r.itable(name).private_runs():
                 done = 0
                 while done < count:
@@ -491,6 +612,54 @@ class SpiceRestorer:
             leaves = {name: h.wait() for name, h in leaves.items()}
         state = unflatten_state(meta["tree"], leaves)
         return state, meta, handles, stats
+
+    def _plan_device(
+        self, r: JifReader, base: Optional[BaseImage], reused: Dict[str, Any]
+    ) -> Tuple[Dict[str, Any], set]:
+        """Split this image's tensors between the two device-path modes:
+        ``plans`` (name -> FusedPlan: upload private pages only, patch on
+        device) and ``full_upload`` (host-assemble as usual, whole-tensor
+        upload off the reader thread).  Fusion applies when the page size
+        divides the dtype and the itable has BASE/ZERO pages to save; BASE
+        pages additionally need the device-resident base — a cache miss
+        under memory pressure falls back to full upload, never fails."""
+        # imported here: the host-only restore path must not pull in jax
+        from repro.core.upload import FusedPlan
+        from repro.kernels.overlay_patch.ops import compact_plan_from_itable
+
+        dp = self.device_path
+        plans: Dict[str, Any] = {}
+        full: set = set()
+        ps = r.page_size
+        for t in r.tensors:
+            if t.name in reused:
+                continue
+            dtype = np.dtype(t.dtype)
+            it = r.itable(t.name)
+            kinds, src, runs, n_priv = compact_plan_from_itable(it)
+            n_pages = it.n_pages
+            if ps % dtype.itemsize != 0 or n_pages == 0 or n_priv == n_pages:
+                full.add(t.name)  # nothing to fuse (or pages unviewable)
+                continue
+            page_elems = ps // dtype.itemsize
+            base_pages = None
+            if (kinds == overlay.KIND_BASE).any():
+                if dp.images is None or base is None:
+                    full.add(t.name)
+                    continue
+                base_pages = dp.images.get_pages(
+                    base, t.name, n_pages, page_elems, dtype
+                )
+                if base_pages is None:  # pressure/mismatch: host fallback
+                    full.add(t.name)
+                    continue
+            plans[t.name] = FusedPlan(
+                name=t.name, shape=tuple(t.shape), dtype=t.dtype,
+                nbytes=t.nbytes, page_bytes=ps, page_elems=page_elems,
+                n_pages=n_pages, n_priv=n_priv, kinds=kinds, src=src,
+                runs=runs, base_pages=base_pages,
+            )
+        return plans, full
 
     # one bootstrap per parent key at a time: N sibling delta restores that
     # all miss the parent must not each materialize the full image

@@ -1,3 +1,13 @@
-from repro.kernels.overlay_patch.ops import overlay_patch
+from repro.kernels.overlay_patch.ops import (
+    compact_plan_from_itable,
+    overlay_patch,
+    overlay_patch_device,
+    plan_from_itable,
+)
 
-__all__ = ["overlay_patch"]
+__all__ = [
+    "overlay_patch",
+    "overlay_patch_device",
+    "plan_from_itable",
+    "compact_plan_from_itable",
+]

@@ -58,6 +58,7 @@ from repro.core.memory import (
 )
 from repro.core.restore import RestoreStats
 from repro.core.trace import AccessRecorder
+from repro.core.upload import DeviceImageCache, DevicePath, UploadStream
 from repro.serve.invocation import (
     EVT_ADMITTED,
     EVT_PLACED,
@@ -206,7 +207,19 @@ class NodeScheduler:
         name: str = "",
         reap_interval_s: Optional[float] = None,
         admission: Optional[AdmissionController] = None,
+        install: object = "eager",
+        upload_depth: int = 2,
+        simulate_upload_bw: Optional[float] = None,
     ):
+        """``install`` selects the device-install policy for restores on
+        this node — "eager" (per-tensor device copy on the prefetcher
+        thread, the default), "host" (tensors stay host numpy), "fused"
+        (device fast path: UploadStream + DeviceImageCache, private pages
+        upload and overlay-patch against HBM-resident bases), or a callable
+        (custom per-tensor transform, eager-style).  ``upload_depth`` sizes
+        the fused path's upload ring (staging slots in flight);
+        ``simulate_upload_bw`` models the interconnect roofline on the ring
+        (labeled benchmark runs only, like ``simulate_read_bw``)."""
         self.name = name
         self.registry = registry or FunctionRegistry()
         self.node_cache = node_cache or NodeImageCache()
@@ -222,14 +235,32 @@ class NodeScheduler:
         )
         self.memory = memory or NodeMemoryManager(budget)
         self._pool.attach(self.memory)
-        self.node_cache.attach(self.memory)  # registers ladder rung 1
+        self.node_cache.attach(self.memory)  # registers ladder rung 2
+        self.install = install
+        self.upload_stream: Optional[UploadStream] = None
+        self.device_images: Optional[DeviceImageCache] = None
+        if install == "fused":
+            # device fast path: one upload ring + one HBM base cache per
+            # node, shared by every restore.  The cache attaches as ladder
+            # rung 1 (cheaper to drop than host bases: re-upload, not
+            # re-read); its capacity is ledger-bounded anyway, so the LRU
+            # cap just tracks the node budget.
+            self.upload_stream = UploadStream(
+                depth=upload_depth, name=f"{name or 'node'}-upload",
+                simulate_bw=simulate_upload_bw,
+            )
+            self.device_images = DeviceImageCache(
+                capacity_bytes=budget if budget else 4 << 30
+            )
+            self.device_images.attach(self.memory)
         # reclaim ladder: residual tails first (cheapest to re-restore),
-        # then recoverable base images (rung 1, above), then idle pool
+        # then device-resident base pages (rung 1, above, fused nodes only),
+        # then recoverable host base images (rung 2, above), then idle pool
         # staging (pure perf cache — without this rung the free list's
         # charge would ratchet up unreclaimably), then LRU warm instances
         self.memory.register_reclaimer("residual", self._reclaim_residual, order=0)
-        self.memory.register_reclaimer("pool", self._reclaim_pool, order=2)
-        self.memory.register_reclaimer("warm-lru", self._reclaim_warm_lru, order=3)
+        self.memory.register_reclaimer("pool", self._reclaim_pool, order=3)
+        self.memory.register_reclaimer("warm-lru", self._reclaim_warm_lru, order=4)
         self._instances: Dict[str, FunctionInstance] = {}
         self._ilock = threading.Lock()
         self._slock = threading.Lock()
@@ -497,6 +528,8 @@ class NodeScheduler:
                 ))
             self._retire(handle)
         self._exec.shutdown(wait=False)
+        if self.upload_stream is not None:
+            self.upload_stream.close()
 
     # ------------------------------------------------------------- eviction
     def evict(self, fname: Optional[str] = None, timeout: float = 30.0) -> None:
@@ -1004,6 +1037,37 @@ class NodeScheduler:
 
         return cancel
 
+    def _install_policy(self):
+        """Resolve the node's ``install`` policy to SpiceRestorer kwargs:
+        (transform, device_path) — exactly one is non-None, except "host"
+        where both are (tensors stay host numpy)."""
+        if callable(self.install):
+            return self.install, None
+        if self.install == "host":
+            return None, None
+        if self.install == "fused":
+            return None, DevicePath(
+                upload=self.upload_stream, images=self.device_images
+            )
+        if self.install == "eager":
+            # eager install: numpy -> device array on the prefetcher thread
+            # (the PTE-install analogue), so execution never pays conversion
+            # copies.  MUST copy: on CPU jnp.asarray can alias the staging
+            # buffer, which the restorer recycles into the zero pool (on TPU
+            # device_put always copies into HBM).
+            return (lambda a: jnp.array(a, copy=True)), None
+        raise ValueError(f"unknown install policy {self.install!r}")
+
+    @staticmethod
+    def _baseline_install(transform, device_path):
+        """Per-leaf install for baseline modes (no upload ring there):
+        fused degrades to an eager device copy, host stays a no-op."""
+        if transform is not None:
+            return transform
+        if device_path is not None:
+            return device_path.installer()
+        return lambda a: a
+
     def _cold_restore(self, spec: FunctionSpec, mode: str, sim_bw=None,
                       preloaded=None, pinned_region=None, io_priority: int = 0,
                       on_working_set=None):
@@ -1020,18 +1084,14 @@ class NodeScheduler:
         if pinned_region is not None and mode not in ("spice", "spice_sync"):
             pinned_region.release()
             pinned_region = None
-        # eager install: numpy -> device array on the prefetcher thread (the
-        # PTE-install analogue), so execution never pays conversion copies.
-        # MUST copy: on CPU jnp.asarray can alias the staging buffer, which
-        # the restorer recycles into the zero pool (on TPU device_put always
-        # copies into HBM).
-        install = lambda a: jnp.array(a, copy=True)
+        transform, device_path = self._install_policy()
+        install = self._baseline_install(transform, device_path)
         if mode == "spice":
             restorer = SpiceRestorer(
                 pool=self.pool, node_cache=self.node_cache,
-                transform=install, simulate_read_bw=sim_bw,
+                transform=transform, simulate_read_bw=sim_bw,
                 iosched=self.iosched, memory=self.memory,
-                stream_priority=io_priority,
+                stream_priority=io_priority, device_path=device_path,
             )
             state, meta, handles, stats = restorer.restore(
                 spec.jif_path, wait=False, preloaded=preloaded,
@@ -1041,9 +1101,9 @@ class NodeScheduler:
         if mode == "spice_sync":
             restorer = SpiceRestorer(
                 pool=self.pool, node_cache=self.node_cache, pipelined=False,
-                transform=install, simulate_read_bw=sim_bw,
+                transform=transform, simulate_read_bw=sim_bw,
                 iosched=self.iosched, memory=self.memory,
-                stream_priority=io_priority,
+                stream_priority=io_priority, device_path=device_path,
             )
             state, meta, handles, stats = restorer.restore(
                 spec.jif_path, wait=True, preloaded=preloaded,

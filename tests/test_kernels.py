@@ -67,6 +67,104 @@ def test_overlay_patch_from_itable():
     )
 
 
+@pytest.mark.parametrize("kind", [overlay.KIND_BASE, overlay.KIND_ZERO])
+def test_overlay_patch_no_private_pages(kind):
+    """n_priv == 0: the dummy (1, page) private array must never be
+    gathered out of bounds (src clamps), for all-BASE and all-ZERO."""
+    n_pages, page = 6, 128
+    base = jnp.asarray(
+        np.random.RandomState(3).randn(n_pages, page).astype(np.float32)
+    )
+    kinds = jnp.full((n_pages,), kind, jnp.int32)
+    src = jnp.zeros((n_pages,), jnp.int32)
+    priv = jnp.zeros((1, page), jnp.float32)  # dummy slot, never selected
+    got = overlay_patch(base, priv, kinds, src, interpret=True)
+    want = overlay_patch_ref(base, priv, kinds, src)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+    expect = base if kind == overlay.KIND_BASE else jnp.zeros_like(base)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(expect))
+
+
+@pytest.mark.parametrize(
+    "kind", [overlay.KIND_BASE, overlay.KIND_ZERO, overlay.KIND_PRIVATE]
+)
+def test_overlay_patch_single_page(kind):
+    """A one-page tensor exercises the degenerate grid for every kind."""
+    page = 256
+    base = jnp.asarray(np.full((1, page), 2.0, np.float32))
+    priv = jnp.asarray(np.full((1, page), 7.0, np.float32))
+    kinds = jnp.asarray([kind], jnp.int32)
+    src = jnp.zeros((1,), jnp.int32)
+    got = overlay_patch(base, priv, kinds, src, interpret=True)
+    want = overlay_patch_ref(base, priv, kinds, src)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+    expect = {overlay.KIND_BASE: 2.0, overlay.KIND_ZERO: 0.0,
+              overlay.KIND_PRIVATE: 7.0}[kind]
+    assert np.all(np.asarray(got) == expect)
+
+
+def test_compact_plan_round_trip_real_itable(tmp_path):
+    """plan_from_itable vs compact_plan_from_itable against a REAL JIF
+    delta itable, including a non-page-multiple tail tensor: the compact
+    read plan + kernel must reproduce the exact snapshotted bytes."""
+    from repro.core import snapshot
+    from repro.core.jif import JifReader
+    from repro.kernels.overlay_patch.ops import compact_plan_from_itable
+
+    ps = 512
+    page_elems = ps // 4
+    rng = np.random.RandomState(11)
+    # w_tail: 3.5 pages (non-page-multiple tail); w_even: page-aligned
+    base_st = {
+        "w_tail": rng.randn(3 * page_elems + page_elems // 2).astype(np.float32),
+        "w_even": rng.randn(4 * page_elems).astype(np.float32),
+    }
+    ft = {k: v.copy() for k, v in base_st.items()}
+    ft["w_tail"][:page_elems] += 1.0       # dirty page 0
+    ft["w_tail"][-page_elems // 2:] = 0.0  # zero the partial tail page
+    ft["w_even"][page_elems: 2 * page_elems] += 1.0  # dirty page 1
+    parent = str(tmp_path / "parent.jif")
+    delta = str(tmp_path / "delta.jif")
+    snapshot(base_st, parent, page_size=ps)
+    snapshot(ft, delta, parent=parent, page_size=ps)
+
+    with JifReader(delta) as r:
+        for t in r.tensors:
+            it = r.itable(t.name)
+            kinds_abs, src_abs = plan_from_itable(it)
+            kinds, src, runs, n_priv = compact_plan_from_itable(it)
+            # both flavors agree on the page classification
+            np.testing.assert_array_equal(kinds, kinds_abs)
+            assert n_priv == int((kinds == overlay.KIND_PRIVATE).sum())
+            assert 0 < n_priv < it.n_pages
+            # execute the compact read plan exactly as the restorer does
+            compact = np.zeros(n_priv * ps, np.uint8)
+            for slot, src_chunk, count in runs:
+                raw = r.pread_chunks(src_chunk, count)
+                compact[slot * ps: slot * ps + len(raw)] = np.frombuffer(
+                    raw, np.uint8
+                )
+            base2d = np.zeros((it.n_pages * ps,), np.uint8)
+            raw_base = base_st[t.name].view(np.uint8)
+            base2d[: raw_base.size] = raw_base
+            base2d = base2d.view(np.float32).reshape(it.n_pages, page_elems)
+            priv2d = compact.view(np.float32).reshape(max(n_priv, 1), page_elems)
+            got = overlay_patch(
+                jnp.asarray(base2d), jnp.asarray(priv2d),
+                jnp.asarray(kinds), jnp.asarray(src), interpret=True,
+            )
+            want = overlay_patch_ref(
+                jnp.asarray(base2d), jnp.asarray(priv2d),
+                jnp.asarray(kinds), jnp.asarray(src),
+            )
+            np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+            # tail slice (the restorer's final reshape) matches the source
+            n_elems = t.nbytes // 4
+            np.testing.assert_array_equal(
+                np.asarray(got).reshape(-1)[:n_elems], ft[t.name]
+            )
+
+
 # --------------------------------------------------------- flash_attention
 @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
 @pytest.mark.parametrize(
