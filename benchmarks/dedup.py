@@ -1,0 +1,261 @@
+"""Cross-tenant dedup scenario: 1 base + K fine-tune deltas over 3 nodes,
+with the content-addressed chunk store on vs off.
+
+Both runs publish the SAME zoo (one parent JIF, K deltas of it where
+tenant pairs share identical fine-tune content — the cross-tenant overlap
+the CAS exists to exploit) and cold-start every delta once through a
+3-node router with deterministic round-robin spread.  The baseline run
+has no chunk store: each node pulls the parent and every delta's private
+chunks from the image store itself.  The dedup run shares ONE
+:class:`repro.core.ChunkStore` cluster-wide: ``publish()`` ingests every
+image's chunks at write time, restores partition their chunk lists into
+resident / node-CAS / peer / miss, and only unique missing digests ever
+touch storage — so K deltas of one base cost ~1 base pull cluster-wide,
+with the rest travelling over the (simulated) interconnect or not at all.
+
+Reported: total image-pull bytes per regime (the arbiter's storage reads
+— cache and peer hits contribute zero), their ratio (the headline:
+must be well under 0.5x with K=8), peer-fetch traffic, per-node
+``chunk_cas``+``image_cache`` high-water at K/2 and K tenants (sublinear
+growth check), a byte-identity sweep (every delta restored through the
+dedup path must equal the plain restore bit-for-bit), and ledger + CAS
+audit results.  Merges into ``BENCH_coldstart.json`` under ``"dedup"``.
+"""
+from __future__ import annotations
+
+import dataclasses
+import os
+import tempfile
+
+import numpy as np
+
+from benchmarks.common import PROMPT, smoke
+
+# merged into BENCH_coldstart.json (written by benchmarks/run.py)
+BENCH_TARGET = "coldstart"
+SUMMARY_KEY = "dedup"
+SUMMARY: dict = {}
+
+N_NODES = 3
+K_DELTAS = 8
+SIM_READ_BW = 2e8        # mid-tier NVMe for image-store and CAS reads
+INTERCONNECT_BW = 1e9    # node-to-node chunk transfers: ~5x faster than disk
+
+
+def _smoke() -> bool:
+    return smoke()
+
+
+def _cfg():
+    from repro.configs import get_config
+
+    cfg = get_config("qwen1.5-0.5b").reduced()
+    if not _smoke():
+        cfg = dataclasses.replace(
+            cfg, pattern_reps=10, n_layers=10, d_model=256, d_ff=512, head_dim=32
+        )
+    return cfg
+
+
+def _publish_zoo(catalog, cfg, dirpath: str):
+    """One parent JIF + K_DELTAS delta-published tenants.  Tenant pairs
+    (2i, 2i+1) apply the SAME fine-tune to the pattern stack — distinct
+    tenants, identical private chunks — plus a tiny per-tenant final_norm
+    nudge so every image is still unique."""
+    import jax
+
+    from repro.core import snapshot
+    from repro.models import lm
+    from repro.serve.engine import layerwise_state
+
+    base_params = lm.init_params(cfg, jax.random.PRNGKey(7))
+    parent_path = f"{dirpath}/dedup-parent.jif"
+    snapshot(layerwise_state(cfg, base_params), parent_path)
+
+    fnames = []
+    for i in range(K_DELTAS):
+        pair = i // 2  # the shared fine-tune identity
+        ft = dict(base_params)
+        ft["pattern"] = list(base_params["pattern"])
+        ft["final_norm"] = base_params["final_norm"] + 0.01 * (i + 1)
+        for pi in range(len(cfg.pattern)):
+            def bump(a, _p=pair):
+                a = np.asarray(a)
+                if a.ndim >= 1 and a.shape[0] == cfg.pattern_reps:
+                    cut = int(cfg.pattern_reps * 0.7)
+                    a = a.copy()
+                    a[cut:] = a[cut:] * (1.0 + 0.02 * (_p + 1))
+                return a
+            ft["pattern"][pi] = jax.tree.map(bump, base_params["pattern"][pi])
+        fname = f"dfn-{i}"
+        catalog.publish(fname, cfg, ft, dirpath, parent=parent_path,
+                        warm_ttl_s=3600.0, formats=("jif",))
+        fnames.append(fname)
+    return fnames
+
+
+def _build_cluster(catalog, store):
+    from repro.core import NodeChunkCache
+    from repro.serve.cluster import ClusterRouter, RoundRobin
+    from repro.serve.node import FixedTTLPolicy, NodeScheduler
+
+    nodes = [
+        NodeScheduler(
+            registry=catalog.registry,
+            keepalive=FixedTTLPolicy(3600.0),
+            name=f"node{i}",
+            chunks=(NodeChunkCache(store, node=f"node{i}")
+                    if store is not None else None),
+        )
+        for i in range(N_NODES)
+    ]
+    # RoundRobin: delta i lands on node i % 3 — deterministic 3-node spread
+    # in both regimes, so pull-byte totals compare like for like
+    return ClusterRouter(
+        catalog, nodes, placement=RoundRobin(),
+        interconnect_bw=INTERCONNECT_BW if store is not None else None,
+    )
+
+
+def _node_hw(router):
+    """Per-node chunk_cas + image_cache high-water (bytes)."""
+    out = {}
+    for n in router.nodes:
+        hw = n.memory.high_water()
+        out[n.name] = int(hw.get("chunk_cas", 0) + hw.get("image_cache", 0))
+    return out
+
+
+def _run_regime(cfg, dirpath: str, dedup: bool):
+    from repro.core import ChunkStore
+    from repro.serve.cluster import FunctionCatalog
+
+    store = (
+        ChunkStore(f"{dirpath}/cas", simulate_read_bw=SIM_READ_BW)
+        if dedup else None
+    )
+    catalog = FunctionCatalog(chunk_store=store)
+    fnames = _publish_zoo(catalog, cfg, dirpath)
+    router = _build_cluster(catalog, store)
+
+    hw_half = None
+    for i, f in enumerate(fnames):
+        r = router.invoke(f, PROMPT, max_new_tokens=2, mode="spice", cfg=cfg,
+                          simulate_read_bw=SIM_READ_BW)
+        assert r.cold, f"{f} expected cold"
+        if i + 1 == len(fnames) // 2:
+            router.drain_residual()
+            hw_half = _node_hw(router)
+    router.drain_residual()
+
+    audit_failures = 0
+    try:
+        router.audit()
+    except AssertionError:
+        audit_failures += 1
+    if store is not None:
+        try:
+            store.audit()
+        except AssertionError:
+            audit_failures += 1
+
+    pull_bytes = sum(
+        n.iosched.snapshot_stats()["bytes_read"] for n in router.nodes
+    )
+    out = {
+        "image_pull_bytes": int(pull_bytes),
+        "per_node_hw_half": hw_half,
+        "per_node_hw_full": _node_hw(router),
+        "peer_fetches": router.stats.get("peer_fetches", 0),
+        "peer_fetch_bytes": router.stats.get("peer_fetch_bytes", 0),
+        "audit_failures": audit_failures,
+    }
+    if store is not None:
+        out["store"] = dict(store.stats)
+        out["store_chunks"] = store.audit()["chunks"]
+        chunk_stats = {
+            n.name: n.chunks.snapshot_stats() for n in router.nodes
+        }
+        out["node_chunk_stats"] = chunk_stats
+    router.close()
+    return fnames, out
+
+
+def _byte_identity_sweep(catalog_dir: str, fnames, registry):
+    """Restore every delta twice — plain vs through one shared chunk cache
+    (so later tenants hit the dedup fast paths) — and diff leaf-by-leaf."""
+    from repro.core import (
+        ChunkStore,
+        NodeChunkCache,
+        NodeImageCache,
+        SpiceRestorer,
+    )
+    from repro.core.treeutil import flatten_state
+
+    store = ChunkStore(f"{catalog_dir}/cas-identity")
+    cache = NodeChunkCache(store, node="check")
+    images = NodeImageCache()
+    mismatches = 0
+    for f in fnames:
+        path = registry.get(f).jif_path
+        plain, _, _, _ = SpiceRestorer(node_cache=NodeImageCache()).restore(path)
+        deduped, _, _, _ = SpiceRestorer(
+            node_cache=images, chunks=cache, pipelined=False
+        ).restore(path)
+        la, _ = flatten_state(plain)
+        lb, _ = flatten_state(deduped)
+        for (na, a), (_nb, b) in zip(la, lb):
+            if not np.array_equal(np.asarray(a), np.asarray(b)):
+                mismatches += 1
+    cache.release_all()
+    return mismatches
+
+
+def run() -> list:
+    cfg = _cfg()
+    rows: list = []
+    SUMMARY.clear()
+    SUMMARY.update({
+        "nodes": N_NODES,
+        "deltas": K_DELTAS,
+        "interconnect_bw": INTERCONNECT_BW,
+        "regimes": {},
+    })
+
+    with tempfile.TemporaryDirectory() as d_off:
+        fnames, base = _run_regime(cfg, d_off, dedup=False)
+        SUMMARY["regimes"]["no_dedup"] = base
+    with tempfile.TemporaryDirectory() as d_on:
+        from repro.serve.cluster import FunctionCatalog  # registry for sweep
+
+        fnames, ded = _run_regime(cfg, d_on, dedup=True)
+        SUMMARY["regimes"]["dedup"] = ded
+        # identity sweep reuses the published zoo before the tempdir dies
+        catalog = FunctionCatalog()
+        os.makedirs(d_on + "/identity", exist_ok=True)
+        zoo = _publish_zoo(catalog, cfg, d_on + "/identity")
+        SUMMARY["byte_mismatches"] = _byte_identity_sweep(
+            d_on, zoo, catalog.registry
+        )
+
+    ratio = ded["image_pull_bytes"] / max(base["image_pull_bytes"], 1)
+    SUMMARY["pull_ratio"] = ratio
+    # per-node (chunk_cas + image_cache) growth from K/2 to K tenants:
+    # < 2.0 everywhere = sublinear in tenant count
+    growth = {
+        n: (ded["per_node_hw_full"][n] / max(ded["per_node_hw_half"][n], 1))
+        for n in ded["per_node_hw_full"]
+    }
+    SUMMARY["hw_growth_half_to_full"] = growth
+    SUMMARY["audit_failures"] = (
+        base["audit_failures"] + ded["audit_failures"]
+    )
+
+    rows.append(("dedup/pull_mb_no_dedup",
+                 base["image_pull_bytes"] / 1e6, ""))
+    rows.append(("dedup/pull_mb_dedup", ded["image_pull_bytes"] / 1e6, ""))
+    rows.append(("dedup/pull_ratio", ratio, "x (must be <=0.5)"))
+    rows.append(("dedup/peer_fetch_mb", ded["peer_fetch_bytes"] / 1e6, ""))
+    rows.append(("dedup/byte_mismatches",
+                 float(SUMMARY["byte_mismatches"]), "must be 0"))
+    return rows

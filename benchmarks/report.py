@@ -81,6 +81,45 @@ def roofline_table(cells) -> str:
     return "\n".join(lines)
 
 
+def dedup_table(dd) -> str:
+    """Markdown for the ``"dedup"`` key: pull bytes per regime, the
+    dedup ratio, cache high-water growth, and the identity/audit gates."""
+    out = [
+        "#### Cross-tenant chunk dedup "
+        f"(1 base + {dd.get('deltas', '?')} deltas / "
+        f"{dd.get('nodes', '?')} nodes)",
+        "",
+        "| regime | image pull (MB) | peer fetch (MB) | audit failures |",
+        "|---|---|---|---|",
+    ]
+    for rname, r in sorted(dd.get("regimes", {}).items()):
+        out.append(
+            f"| {rname} | {r['image_pull_bytes']/1e6:.1f} | "
+            f"{r.get('peer_fetch_bytes', 0)/1e6:.1f} | "
+            f"{r.get('audit_failures', '?')} |"
+        )
+    ratio = dd.get("pull_ratio")
+    if ratio is not None:
+        out.append("")
+        out.append(
+            f"dedup pull bytes / no-dedup = **{ratio:.3f}** (must be <=0.5); "
+            f"byte mismatches: **{dd.get('byte_mismatches', '?')}** (must be 0)"
+        )
+    growth = dd.get("hw_growth_half_to_full")
+    if growth:
+        grew = ", ".join(
+            f"{n}: {g:.2f}x" for n, g in sorted(growth.items())
+        )
+        out.append(
+            f"per-node chunk_cas+image_cache high-water, K/2 -> K tenants: "
+            f"{grew} (each <2.0x = sublinear)"
+        )
+    if dd.get("error"):
+        out.append(f"**SCENARIO FAILED**: {dd['error']}")
+    out.append("")
+    return "\n".join(out)
+
+
 def coldstart_tables(d) -> str:
     """Markdown for BENCH_coldstart.json: per-mode TTFT, delta economics,
     memory-pressure high-water marks, and the cluster placement table."""
@@ -198,6 +237,9 @@ def coldstart_tables(d) -> str:
         if qos.get("error"):
             out.append(f"**SCENARIO FAILED**: {qos['error']}")
         out.append("")
+    dd = d.get("dedup")
+    if dd:
+        out.append(dedup_table(dd))
     dr = d.get("device_restore")
     if dr:
         full = dr.get("full_image", {})
@@ -254,7 +296,7 @@ def main():
     ap.add_argument("--tag", default="")
     ap.add_argument(
         "--section", default="all",
-        choices=["dryrun", "roofline", "coldstart", "both", "all"],
+        choices=["dryrun", "roofline", "coldstart", "dedup", "both", "all"],
     )
     args = ap.parse_args()
     cells = load(args.tag)
@@ -272,6 +314,16 @@ def main():
             print(coldstart_tables(json.loads(COLDSTART.read_text())))
         else:
             print("_BENCH_coldstart.json not found — run benchmarks.run first_")
+    if args.section == "dedup":
+        print("### Chunk-dedup table\n")
+        dd = (
+            json.loads(COLDSTART.read_text()).get("dedup")
+            if COLDSTART.exists() else None
+        )
+        if dd:
+            print(dedup_table(dd))
+        else:
+            print("_no dedup data — run benchmarks.run --only dedup first_")
 
 
 if __name__ == "__main__":

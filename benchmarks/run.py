@@ -8,6 +8,9 @@ Prints ``name,us_per_call,derived`` CSV. Module map:
   ablation          -> Fig 11          (restore optimizations, incremental)
   concurrency       -> Fig 12 (+Fig 3 interference) (burst max latency)
   cluster           -> N-node placement policies (locality vs baselines)
+  dedup             -> content-addressed chunk store: 1 base + K deltas
+                       over 3 nodes, CAS on vs off; merged into
+                       BENCH_coldstart.json under "dedup"
   qos               -> Invocation API v2: LATENCY vs BATCH open-loop mix
   restore_bandwidth -> device-restore fast path (upload stream + overlay
                        patch) vs the storage roofline; merged into
@@ -39,6 +42,7 @@ MODULES = [
     "ablation",
     "concurrency",
     "cluster",
+    "dedup",
     "qos",
     "restore_bandwidth",
     "roofline",

@@ -2,6 +2,8 @@
 runtime — JIF container, overlay dedup, zero pool, node base-image cache,
 the Spice restore engine, and the baselines it is evaluated against."""
 from repro.core.cache import BaseImage, NodeImageCache
+from repro.core.chunkstore import ChunkStore, NodeChunkCache
+from repro.core.digest import DIGEST_BYTES, chunk_digests, digest_key
 from repro.core.overlay import (
     DEFAULT_PAGE,
     KIND_BASE,
@@ -12,6 +14,7 @@ from repro.core.overlay import (
 from repro.core.iosched import IOStream, PrefetchIOScheduler
 from repro.core.lifecycle import SnapshotPipeline
 from repro.core.memory import (
+    KIND_CHUNK_CAS,
     KIND_DEVICE_IMAGE,
     KIND_IMAGE_CACHE,
     KIND_POOL,
@@ -33,6 +36,11 @@ __all__ = [
     "SnapshotPipeline",
     "BaseImage",
     "NodeImageCache",
+    "ChunkStore",
+    "NodeChunkCache",
+    "DIGEST_BYTES",
+    "chunk_digests",
+    "digest_key",
     "BufferPool",
     "NodeMemoryManager",
     "MemoryRegion",
@@ -41,6 +49,7 @@ __all__ = [
     "KIND_POOL",
     "KIND_IMAGE_CACHE",
     "KIND_DEVICE_IMAGE",
+    "KIND_CHUNK_CAS",
     "KIND_WORKING_SET",
     "KIND_RESIDUAL",
     "KIND_SCRATCH",

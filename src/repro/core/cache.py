@@ -52,6 +52,7 @@ class BaseImage:
         node_cache: Optional["NodeImageCache"] = None,
         iosched=None,
         simulate_read_bw: Optional[float] = None,
+        chunks=None,
     ) -> "BaseImage":
         """Materialize a full image from a JIF on disk.  The restore runs
         synchronously through ``node_cache``, which resolves (and, for delta
@@ -69,9 +70,13 @@ class BaseImage:
             name = parent_cache_key(path)
         # pipelined even though we wait: inline streams are drained on the
         # caller's thread and would bypass the scheduler's arbitration
+        # ``chunks`` (the node's chunk cache) lets the bootstrap itself
+        # dedup: a parent whose chunks a peer already pulled arrives over
+        # the interconnect instead of the slow image store
         restorer = SpiceRestorer(
             node_cache=node_cache,
             iosched=iosched, simulate_read_bw=simulate_read_bw,
+            chunks=chunks,
         )
         state, _, _, _ = restorer.restore(path)
         return cls.from_state(name, state, page_size)
@@ -94,12 +99,14 @@ class NodeImageCache:
     Attached to a :class:`~repro.core.memory.NodeMemoryManager`, every
     resident image is charged to an ``image_cache`` region and eviction
     becomes a registered *reclaimer* invoked under node memory pressure
-    (rung 2 of the ladder: after residual tails and device-resident base
-    pages, before warm instances) instead of only a private capacity LRU."""
+    (rung 3 of the ladder: after residual tails, device-resident base
+    pages, and the RAM chunk CAS, before warm instances) instead of only a
+    private capacity LRU."""
 
-    RECLAIM_ORDER = 2  # ladder rung: residual (0) -> device images (1) ->
-    # image cache -> pool staging -> warm LRU.  Host base images outrank
-    # device copies: dropping a device base costs one re-upload from here,
+    RECLAIM_ORDER = 3  # ladder rung: residual (0) -> device images (1) ->
+    # chunk CAS (2) -> image cache -> pool staging -> warm LRU.  Host base
+    # images outrank device copies and RAM chunks: dropping a device base
+    # costs one re-upload from here, a RAM chunk one local CAS read, but
     # dropping a host base forces a disk re-read (or fails the restore).
 
     def __init__(self, capacity_bytes: int = 8 << 30):
@@ -256,7 +263,7 @@ class NodeImageCache:
         return released
 
     def reclaim(self, nbytes: int, protect=frozenset()) -> int:
-        """Ladder rung 2: evict LRU *recoverable* images until ``nbytes``
+        """Ladder rung 3: evict LRU *recoverable* images until ``nbytes``
         are freed (may drain them all — a restore mid-flight keeps its own
         reference to the base it resolved, and the next miss bootstraps the
         parent back from its JIF).  Pinned images (no disk backing) are

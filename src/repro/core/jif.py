@@ -37,6 +37,8 @@ from typing import Any, Dict, Iterable, List, Optional, Tuple
 import msgpack
 import numpy as np
 
+from repro.core.digest import DIGEST_BYTES as _DIGEST_BYTES
+from repro.core.digest import chunk_digest, zero_chunk_digest
 from repro.core.overlay import IntervalTable
 
 MAGIC = b"JIF1"
@@ -44,7 +46,13 @@ ALIGN_TABLE = 64
 ALIGN_DATA = 4096
 VERSION = 2
 
-_DIGEST_BYTES = 16
+# v1 images carry no digest region; backfilled digests are persisted next to
+# the image so the hash cost is paid once per image, not once per restore
+SIDECAR_SUFFIX = ".digests"
+
+
+def digest_sidecar_path(path: str) -> str:
+    return path + SIDECAR_SUFFIX
 
 
 @dataclasses.dataclass
@@ -203,6 +211,10 @@ class JifReader:
             self._f.close()  # a corrupt image must not leak the fd to GC
             raise
         self._itables: Dict[str, IntervalTable] = {}
+        # backfilled digests for v1 images: loaded lazily from the sidecar
+        # (or computed by ensure_digests); None = not yet probed
+        self._sidecar: Optional[Dict[str, np.ndarray]] = None
+        self._sidecar_probed = False
 
     @property
     def n_data_chunks(self) -> int:
@@ -238,17 +250,134 @@ class JifReader:
             self.itable(t.name)
 
     def digests(self, name: str) -> Optional[np.ndarray]:
-        """Stored per-tensor chunk digests ((n, 16) uint8), or None for v1
-        images written before digests were captured."""
+        """Per-tensor chunk digests ((n, 16) uint8): the stored v2 digest
+        region, else a backfill sidecar if one exists, else None."""
         t = self.by_name[name]
         if not t.digest_off:
-            return None
+            side = self._load_sidecar()
+            return side.get(name) if side else None
         raw = os.pread(self._f.fileno(), t.digest_rows * _DIGEST_BYTES, t.digest_off)
         return np.frombuffer(raw, np.uint8).reshape(-1, _DIGEST_BYTES)
 
     @property
     def has_digests(self) -> bool:
-        return all(t.digest_off for t in self.tensors) if self.tensors else False
+        """True when every tensor has digests available — stored in the
+        image (v2) or backfilled via a valid sidecar (v1)."""
+        if not self.tensors:
+            return False
+        if all(t.digest_off for t in self.tensors):
+            return True
+        side = self._load_sidecar()
+        if not side:
+            return False
+        return all(t.digest_off or t.name in side for t in self.tensors)
+
+    # --- v1 digest backfill (persisted sidecar) -----------------------------
+    def _binding(self) -> Dict[str, int]:
+        st = os.stat(self.path)
+        return {"mtime_ns": st.st_mtime_ns, "size": st.st_size}
+
+    def _load_sidecar(self) -> Optional[Dict[str, np.ndarray]]:
+        """Load (once) the ``<path>.digests`` sidecar, if present and still
+        bound to THIS file's identity (a rewritten image invalidates it)."""
+        if self._sidecar_probed:
+            return self._sidecar
+        self._sidecar_probed = True
+        sp = digest_sidecar_path(self.path)
+        try:
+            with open(sp, "rb") as f:
+                doc = msgpack.unpackb(f.read(), raw=False)
+            if doc.get("binding") != self._binding():
+                return None  # stale: the jif was rewritten since backfill
+            self._sidecar = {
+                name: np.frombuffer(raw, np.uint8).reshape(-1, _DIGEST_BYTES)
+                for name, raw in doc["tensors"].items()
+            }
+        except (OSError, ValueError, msgpack.UnpackException):
+            return None
+        return self._sidecar
+
+    def write_digest_sidecar(self, digests: Dict[str, np.ndarray]) -> None:
+        """Persist backfilled digests next to the image (atomic tmp+rename),
+        bound to the jif's current identity, and adopt them in-process."""
+        doc = {
+            "binding": self._binding(),
+            "tensors": {
+                name: np.ascontiguousarray(dg, np.uint8).tobytes()
+                for name, dg in digests.items()
+            },
+        }
+        sp = digest_sidecar_path(self.path)
+        tmp = sp + ".tmp"
+        with open(tmp, "wb") as f:
+            f.write(msgpack.packb(doc, use_bin_type=True))
+            f.flush()
+            os.fsync(f.fileno())
+        os.replace(tmp, sp)
+        self._sidecar = {
+            name: np.frombuffer(doc["tensors"][name], np.uint8).reshape(-1, _DIGEST_BYTES)
+            for name in doc["tensors"]
+        }
+        self._sidecar_probed = True
+
+    def ensure_digests(self, base=None, write_sidecar: bool = True) -> bool:
+        """Backfill digests for a pre-v2 image so it participates in dedup.
+
+        Hashes each tensor's chunks from what the image already encodes:
+        PRIVATE chunks from the data segment (unpadded tails), ZERO chunks
+        as zero runs, BASE chunks from ``base`` (a resolved
+        :class:`~repro.core.cache.BaseImage`).  A delta image with BASE
+        chunks and no ``base`` raises ``ValueError`` — its bytes are not in
+        this file.  Persists a sidecar by default so the hash cost is paid
+        once per image.  Returns True once digests cover every tensor."""
+        if self.has_digests:
+            return True
+        ps = self.page_size
+        out: Dict[str, np.ndarray] = {}
+        for t in self.tensors:
+            if t.digest_off:
+                continue
+            n = max(1, -(-t.nbytes // ps))
+            dg = np.empty((n, _DIGEST_BYTES), np.uint8)
+
+            def clen(page: int) -> int:  # unpadded length of chunk `page`
+                return min(ps, t.nbytes - page * ps)
+
+            for start, count, kind, src in self.itable(t.name).table:
+                start, count, kind, src = int(start), int(count), int(kind), int(src)
+                if kind == 2:  # PRIVATE: hash straight from the data segment
+                    raw = self.pread_chunks(src, count)
+                    for j in range(count):
+                        dg[start + j] = np.frombuffer(
+                            chunk_digest(raw[j * ps : j * ps + clen(start + j)]),
+                            np.uint8,
+                        )
+                elif kind == 0:  # ZERO
+                    for j in range(count):
+                        dg[start + j] = np.frombuffer(
+                            zero_chunk_digest(clen(start + j)), np.uint8
+                        )
+                else:  # BASE: bytes live in the parent, not this file
+                    if base is None:
+                        raise ValueError(
+                            f"{self.path}: tensor {t.name!r} has BASE chunks; "
+                            "backfilling digests needs the resolved base image"
+                        )
+                    raw = np.ascontiguousarray(
+                        base.chunk_bytes(t.name, start, count), np.uint8
+                    ).tobytes()
+                    for j in range(count):
+                        dg[start + j] = np.frombuffer(
+                            chunk_digest(raw[j * ps : j * ps + clen(start + j)]),
+                            np.uint8,
+                        )
+            out[t.name] = dg
+        if write_sidecar:
+            self.write_digest_sidecar(out)
+        else:
+            self._sidecar = dict(out)
+            self._sidecar_probed = True
+        return True
 
     # --- data segment I/O ---------------------------------------------------
     def pread_chunks(self, chunk_start: int, n: int) -> bytes:

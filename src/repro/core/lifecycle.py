@@ -32,6 +32,7 @@ from typing import Any, Callable, Dict, List, Optional, Tuple
 import numpy as np
 
 from repro.core import jif, overlay
+from repro.core.digest import chunk_digests
 from repro.core.treeutil import flatten_state
 
 
@@ -76,15 +77,35 @@ class _Classified:
 
 class _JifDigestSource:
     """Digest provider over a parent JIF: v2 parents serve stored digests
-    with zero data-segment I/O; v1 parents are materialized once into the
-    node cache (they predate stored digests)."""
+    with zero data-segment I/O.  v1 parents try the backfill path first
+    (hash straight from the file, persisted sidecar — no BASE chunks means
+    no materialization needed); delta v1 parents are materialized once into
+    the node cache, and their digests are persisted as a sidecar so the
+    NEXT classify against them is zero-I/O too."""
 
     def __init__(self, reader: jif.JifReader, node_cache=None):
         self._r = reader
         self._img = None
         self._node_cache = node_cache
         if not reader.has_digests:
+            try:
+                # in-memory backfill: classify must not leave sidecars next
+                # to images it merely READ (e.g. checked-in goldens) — the
+                # dedup paths (restore with a chunk cache, CAS ingest)
+                # persist the sidecar when the image actually participates
+                reader.ensure_digests(write_sidecar=False)
+                return
+            except ValueError:
+                pass  # BASE chunks: parent bytes are not in this file
             self._img = _materialize_parent(reader.path, node_cache)
+            try:
+                reader.write_digest_sidecar({
+                    t.name: self._img.digests(t.name)
+                    for t in reader.tensors
+                    if self._img.digests(t.name) is not None
+                })
+            except OSError:
+                pass  # read-only store: backfill stays in-memory this run
 
     def digests(self, name: str) -> Optional[np.ndarray]:
         if self._img is not None:
@@ -163,7 +184,7 @@ class SnapshotPipeline:
             c.names.append(name)
             c.buffers[name] = raw
             mv = memoryview(raw)
-            dg = overlay.chunk_digests(mv, ps)
+            dg = chunk_digests(mv, ps)  # shared identity (repro.core.digest)
             c.digests[name] = dg
             base_dg = digest_source.digests(name) if digest_source is not None else None
             c.kinds[name] = overlay.classify(mv, ps, base_dg, digests=dg)

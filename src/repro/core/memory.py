@@ -23,8 +23,10 @@ estimate.  This module is the node-side reproduction of that contract:
 
 * **Registered reclaimers** replace per-subsystem private LRU loops: under
   pressure the manager walks reclaimers in ladder order — residual tails
-  first (cheapest to re-restore), then recoverable base images, then idle
-  pool staging, then LRU warm instances — until the deficit is covered.
+  first (cheapest to re-restore), then device base copies, then the
+  RAM-resident chunk CAS (re-readable from its disk CAS), then recoverable
+  base images, then idle pool staging, then LRU warm instances — until the
+  deficit is covered.
   Reclaimers run *outside* the manager lock, so they may release regions
   (and take their own locks) freely.
 
@@ -45,6 +47,7 @@ __all__ = [
     "KIND_POOL",
     "KIND_IMAGE_CACHE",
     "KIND_DEVICE_IMAGE",
+    "KIND_CHUNK_CAS",
     "KIND_WORKING_SET",
     "KIND_RESIDUAL",
     "KIND_SCRATCH",
@@ -58,13 +61,14 @@ __all__ = [
 KIND_POOL = "pool"                # BufferPool free list + outstanding buffers
 KIND_IMAGE_CACHE = "image_cache"  # NodeImageCache resident base images
 KIND_DEVICE_IMAGE = "device_image"  # DeviceImageCache HBM-resident base pages
+KIND_CHUNK_CAS = "chunk_cas"      # NodeChunkCache RAM-resident unique chunks
 KIND_WORKING_SET = "working_set"  # pinned working-set bytes of an instance
 KIND_RESIDUAL = "residual"        # residual (post-ws-boundary) bytes
 KIND_SCRATCH = "scratch"          # transient snapshot/relayout staging
 
 MEMORY_KINDS = (
-    KIND_POOL, KIND_IMAGE_CACHE, KIND_DEVICE_IMAGE, KIND_WORKING_SET,
-    KIND_RESIDUAL, KIND_SCRATCH,
+    KIND_POOL, KIND_IMAGE_CACHE, KIND_DEVICE_IMAGE, KIND_CHUNK_CAS,
+    KIND_WORKING_SET, KIND_RESIDUAL, KIND_SCRATCH,
 )
 
 
@@ -323,8 +327,8 @@ class NodeMemoryManager:
         """Register a reclaimer rung.  ``fn(nbytes, protect)`` frees up to
         ``nbytes`` (by releasing regions) and returns the bytes it freed.
         Lower ``order`` runs first — the node ladder is residual (0) →
-        device-image (1) → image-cache (2) → pool staging (3) → LRU warm
-        instances (4)."""
+        device-image (1) → chunk-cas (2) → image-cache (3) → pool
+        staging (4) → LRU warm instances (5)."""
         with self._cv:
             self._reclaimers = sorted(
                 [r for r in self._reclaimers if r[1] != name]

@@ -11,10 +11,14 @@ up by binary search.
 """
 from __future__ import annotations
 
-import hashlib
 from typing import Dict, List, Optional, Tuple
 
 import numpy as np
+
+# chunk identity lives in repro.core.digest (shared with jif/lifecycle/
+# chunkstore); re-exported here for back-compat with existing callers
+from repro.core.digest import DIGEST_BYTES as _DIGEST_BYTES
+from repro.core.digest import chunk_digests
 
 KIND_ZERO = 0
 KIND_BASE = 1
@@ -22,22 +26,9 @@ KIND_PRIVATE = 2
 
 DEFAULT_PAGE = 64 * 1024  # 16 OS pages; hash/dedup granularity
 
-_DIGEST_BYTES = 16
-
 
 def n_chunks(nbytes: int, page_size: int) -> int:
     return max(1, -(-nbytes // page_size))
-
-
-def chunk_digests(buf: memoryview, page_size: int) -> np.ndarray:
-    """(n, 16) uint8 blake2b digests per chunk."""
-    buf = memoryview(buf).cast("B")
-    n = n_chunks(len(buf), page_size)
-    out = np.empty((n, _DIGEST_BYTES), np.uint8)
-    for i in range(n):
-        h = hashlib.blake2b(buf[i * page_size : (i + 1) * page_size], digest_size=_DIGEST_BYTES)
-        out[i] = np.frombuffer(h.digest(), np.uint8)
-    return out
 
 
 def zero_mask(buf: memoryview, page_size: int) -> np.ndarray:

@@ -29,6 +29,8 @@ import numpy as np
 
 from repro.core import overlay
 from repro.core.cache import BaseImage, NodeImageCache
+from repro.core.chunkstore import NodeChunkCache
+from repro.core.digest import digest_key
 from repro.core.iosched import IOStream, PrefetchIOScheduler
 from repro.core.jif import JifReader
 from repro.core.memory import (
@@ -64,6 +66,14 @@ class RestoreStats:
     upload_s: float = 0.0             # time spent in host->device transfers
     uploaded_bytes: int = 0           # bytes that actually crossed to HBM
     patched_on_device_bytes: int = 0  # tensor bytes materialized by the kernel
+    # content-addressed dedup: bytes served per tier instead of pulled from
+    # the image store, plus the metadata-time plan partition (chunk counts)
+    chunk_resident_bytes: int = 0  # served from the RAM chunk cache (zero I/O)
+    chunk_cas_bytes: int = 0       # read from the node-local disk CAS
+    chunk_peer_bytes: int = 0      # transferred node-to-node over the wire
+    chunk_plan_resident: int = 0   # chunks planned as RAM hits
+    chunk_plan_cas: int = 0        # chunks planned as local CAS hits
+    chunk_plan_miss: int = 0       # chunks planned as image-store pulls
     ws_names: Optional[List[str]] = None  # traced working-set tensor names
 
     # Snapshot consistency: the prefetcher mutates counters concurrently
@@ -182,6 +192,7 @@ class SpiceRestorer:
         stream_priority: int = 0,
         memory: Optional[NodeMemoryManager] = None,
         device_path=None,
+        chunks: Optional[NodeChunkCache] = None,
     ):
         """``transform`` runs on the scheduler's reader thread per completed
         tensor (e.g. jnp.asarray = eager device install, off the critical
@@ -208,7 +219,16 @@ class SpiceRestorer:
         pages with no device base available (cache miss under pressure, or
         ``device_path.images is None``).  ``transform`` is ignored for
         device-path tensors; ``on_ready`` only fires for host-path
-        tensors."""
+        tensors.
+
+        ``chunks`` (a :class:`repro.core.chunkstore.NodeChunkCache`)
+        enables dedup-aware restore planning: each host-path tensor's
+        chunk list is partitioned by digest into resident hits (served
+        from the RAM chunk cache, zero I/O), node-local CAS hits (one
+        local disk read), peer hits (interconnect transfer), and misses —
+        only the missing chunks are pulled from the image store, and each
+        pull ingests into the cache so K deltas of one base cost ~1 base
+        read across the node/cluster, not K."""
         self.pool = pool or BufferPool()
         self.node_cache = node_cache or NodeImageCache()
         self.io_chunk_bytes = io_chunk_bytes
@@ -219,6 +239,7 @@ class SpiceRestorer:
         self.stream_priority = stream_priority
         self.memory = memory
         self.device_path = device_path
+        self.chunks = chunks
         # (ws_region, residual_region) of the LAST restore() call — the
         # node scheduler transfers these onto the FunctionInstance, which
         # releases them on eviction (restorers are per-restore on that path)
@@ -307,6 +328,39 @@ class SpiceRestorer:
                     preloaded_region.release()
                 r.close()
                 raise
+
+        # ---- dedup planning: partition chunk lists by digest -------------
+        # Metadata-time only (the itables and digest regions are already
+        # resident — zero data-segment I/O): record how many chunks the
+        # node can serve without touching the image store.  The actual
+        # short-circuit happens per op at read time (dedup_read_op), because
+        # demand boosts reorder tensors and earlier ops ingest chunks later
+        # ones need — the plan counters are the *forecast*, not the contract.
+        dedup_digests: Dict[str, np.ndarray] = {}
+        if self.chunks is not None:
+            try:
+                # v1 images backfill digests once (persisted sidecar) so
+                # legacy images participate in dedup instead of being opaque
+                have = r.has_digests or r.ensure_digests(base=base)
+            except (ValueError, OSError):
+                have = False  # e.g. unreadable sidecar dir: restore sans dedup
+            if have:
+                plan_hits = {"ram": 0, "cas": 0, None: 0}
+                for t in r.tensors:
+                    if t.name in reused or t.name in plans:
+                        continue
+                    dg = r.digests(t.name)
+                    if dg is None:
+                        continue
+                    dedup_digests[t.name] = dg
+                    for start, count, _src in r.itable(t.name).private_runs():
+                        for j in range(start, start + count):
+                            plan_hits[self.chunks.probe(dg[j])] += 1
+                stats.add(
+                    chunk_plan_resident=plan_hits["ram"],
+                    chunk_plan_cas=plan_hits["cas"],
+                    chunk_plan_miss=plan_hits[None],
+                )
 
         # ---- admission: reserve regions BEFORE any data is staged --------
         region_ws = region_res = None
@@ -489,6 +543,70 @@ class SpiceRestorer:
             stats.add(bytes_read=len(raw), io_ops=1)
             return len(raw)
 
+        def dedup_read_op(name: str, src: int, dst_chunk: int, count: int) -> int:
+            """read_op with content-addressed short-circuits: chunks already
+            in the RAM chunk cache, the local CAS, or held by a peer are
+            served without touching the image store; only runs of
+            consecutive misses are pulled (one coalesced sequential read
+            each), and every pulled chunk is ingested so the next tenant —
+            on this node or a peer — hits instead.  Returns only the bytes
+            actually pulled from the image store, so the arbiter's
+            ``bytes_read`` keeps meaning storage pulls."""
+            t = r.by_name[name]
+            ps = r.page_size
+            dgs = dedup_digests[name]
+            cache = self.chunks
+            pulled = [0]
+
+            def clen(page: int) -> int:  # unpadded length of chunk `page`
+                return min(ps, t.nbytes - page * ps)
+
+            def pull(j0: int, n: int) -> None:
+                raw = r.pread_chunks(src + j0, n)
+                if self.simulate_read_bw:
+                    time.sleep(len(raw) / self.simulate_read_bw)
+                dst0 = (dst_chunk + j0) * ps
+                nb = min(len(raw), t.nbytes - dst0)
+                buffers[name][dst0 : dst0 + nb] = np.frombuffer(raw[:nb], np.uint8)
+                stats.add(bytes_read=len(raw), io_ops=1)
+                pulled[0] += len(raw)
+                for j in range(j0, j0 + n):
+                    off = (j - j0) * ps
+                    cache.ingest(
+                        dgs[dst_chunk + j], raw[off : off + clen(dst_chunk + j)]
+                    )
+
+            miss0 = miss_n = 0
+            for j in range(count):
+                page = dst_chunk + j
+                dk = digest_key(dgs[page])
+                data = cache.get(dk)
+                if data is not None:
+                    stats.add(chunk_resident_bytes=len(data))
+                else:
+                    data = cache.get_cas(dk)
+                    if data is not None:
+                        stats.add(chunk_cas_bytes=len(data))
+                    else:
+                        data = cache.fetch_peer(dk)
+                        if data is not None:
+                            stats.add(chunk_peer_bytes=len(data))
+                if data is None:
+                    if miss_n == 0:
+                        miss0 = j
+                    miss_n += 1
+                    continue
+                if miss_n:
+                    pull(miss0, miss_n)
+                    miss_n = 0
+                nb = clen(page)
+                buffers[name][page * ps : page * ps + nb] = np.frombuffer(
+                    data[:nb], np.uint8
+                )
+            if miss_n:
+                pull(miss0, miss_n)
+            return pulled[0]
+
         def read_compact_op(name: str, src: int, dst_slot: int, count: int) -> int:
             """Sequential read of private chunks into the COMPACT staging
             buffer: ``dst_slot`` indexes private-page slots (0..n_priv-1),
@@ -538,11 +656,14 @@ class SpiceRestorer:
                         done += n
                 return ops
             ops = [partial(fill_base_zero, name)]
+            # dedup applies per host-staged tensor (never fused-compact
+            # slots); the op probes the chunk cache at read time
+            rop = dedup_read_op if name in dedup_digests else read_op
             for start, count, src in r.itable(name).private_runs():
                 done = 0
                 while done < count:
                     n = min(count - done, chunk)
-                    ops.append(partial(read_op, name, src + done, start + done, n))
+                    ops.append(partial(rop, name, src + done, start + done, n))
                     done += n
             return ops
 
@@ -705,6 +826,7 @@ class SpiceRestorer:
                                 node_cache=self.node_cache,
                                 iosched=self.iosched,
                                 simulate_read_bw=self.simulate_read_bw,
+                                chunks=self.chunks,
                             )
                         except FileNotFoundError:
                             base = None

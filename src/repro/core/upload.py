@@ -285,7 +285,8 @@ class DeviceImageCache:
     ``RECLAIM_ORDER``); every entry is recoverable from the host
     :class:`BaseImage`, so the rung may drain the cache entirely."""
 
-    RECLAIM_ORDER = 1  # residual (0) -> device images -> host image cache (2)
+    RECLAIM_ORDER = 1  # residual (0) -> device images -> chunk CAS (2) ->
+    # host image cache (3)
 
     def __init__(self, capacity_bytes: int = 4 << 30,
                  install: Optional[Callable] = None):

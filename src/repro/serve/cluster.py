@@ -51,6 +51,7 @@ import numpy as np
 
 from repro.configs.base import ModelConfig
 from repro.core import (
+    ChunkStore,
     FunctionRegistry,
     FunctionSpec,
     NodeImageCache,
@@ -99,15 +100,32 @@ class FunctionCatalog:
         self,
         registry: Optional[FunctionRegistry] = None,
         base_images: Optional[NodeImageCache] = None,
+        chunk_store: Optional[ChunkStore] = None,
     ):
         self.registry = registry or FunctionRegistry()
         self.base_images = base_images or NodeImageCache()
+        # cluster-wide content-addressed store: publish()/relayout() ingest
+        # every image's chunks, so delta chains and sibling fine-tunes never
+        # store an identical chunk twice; None = dedup off
+        self.chunk_store = chunk_store
         self._lock = threading.Lock()
         # recorded first-touch orders from warm generations (relayout feed)
         self._recorded: Dict[str, List[str]] = {}
         # fname -> (jif identity, base-ref name) for placement locality
         self._locality: Dict[str, Tuple[Tuple[str, int, int], Optional[str]]] = {}
-        self.stats = {"publishes": 0, "relayouts": 0}
+        # digest -> node names holding the chunk (peer-fetch routing), fed
+        # by NodeChunkCache announce hooks the router wires up
+        self._chunk_holders: Dict[bytes, set] = {}
+        # fname -> published manifest (one store ref per chunk occurrence;
+        # a republish/relayout returns the OLD manifest's refs)
+        self._chunk_manifests: Dict[str, List[bytes]] = {}
+        self.stats = {
+            "publishes": 0,
+            "relayouts": 0,
+            "chunks_published": 0,
+            "chunk_bytes_unique": 0,
+            "chunk_bytes_deduped": 0,
+        }
 
     def _bump(self, key: str) -> None:
         with self._lock:
@@ -117,6 +135,44 @@ class FunctionCatalog:
         """Install an operator-provided base image into the authoring cache
         (pinned by default: there is no JIF behind it to recover from)."""
         self.base_images.put(img, evictable=evictable)
+
+    # ------------------------------------------------- chunk store (dedup)
+    def _ingest_chunks(self, fname: str, jif_path: str) -> None:
+        """Write-time dedup: push the image's chunks into the CAS (one ref
+        per occurrence) and swap the function's manifest.  A v1 image whose
+        digests cannot be backfilled standalone (delta with BASE chunks)
+        just skips dedup — never fails the publish."""
+        if self.chunk_store is None:
+            return
+        try:
+            manifest, unique, dup = self.chunk_store.ingest_jif(jif_path)
+        except ValueError:
+            return
+        with self._lock:
+            old = self._chunk_manifests.get(fname)
+            self._chunk_manifests[fname] = manifest
+            self.stats["chunks_published"] += len(manifest)
+            self.stats["chunk_bytes_unique"] += unique
+            self.stats["chunk_bytes_deduped"] += dup
+        if old:
+            self.chunk_store.release_many(old)
+
+    def announce_chunk(self, node: str, digest: bytes, present: bool) -> None:
+        """Node residency feed for the digest→holders index (wired to each
+        NodeChunkCache by the router)."""
+        with self._lock:
+            holders = self._chunk_holders.setdefault(digest, set())
+            if present:
+                holders.add(node)
+            else:
+                holders.discard(node)
+                if not holders:
+                    del self._chunk_holders[digest]
+
+    def chunk_holders(self, digest: bytes) -> Tuple[str, ...]:
+        """Nodes currently holding ``digest`` (RAM or disk tier)."""
+        with self._lock:
+            return tuple(self._chunk_holders.get(digest, ()))
 
     # -------------------------------------------------------------- publish
     def publish(
@@ -173,6 +229,7 @@ class FunctionCatalog:
                 meta={"arch": cfg.name, "function": name},
                 memory=memory,
             )
+            self._ingest_chunks(name, jif_path)
         if "criu" in formats:
             baselines.criu_star_snapshot(state, f"{dirpath}/{name}.criu")
         if "monolith" in formats:
@@ -285,6 +342,10 @@ class FunctionCatalog:
             # rewrite copy charged as scratch against the tracing node
             memory=node.memory if node is not None else None,
         )
+        # the rewrite changed the data segment: re-ingest under the new
+        # identity (the old manifest's refs are returned — chunks no other
+        # image or node references are unlinked from the CAS)
+        self._ingest_chunks(fname, spec.jif_path)
         self._bump("relayouts")
         return stats
 
@@ -432,12 +493,18 @@ class ClusterRouter:
         scale_out_queue_depth: Optional[int] = None,
         latency_spill_depth: int = 2,
         urgent_deadline_s: float = 1.0,
+        interconnect_bw: Optional[float] = None,
     ):
         """``latency_spill_depth``: an urgent invocation (LATENCY class, or
         a deadline within ``urgent_deadline_s``) whose sticky replica has
         this many invocations in flight steals a replica on the node
         ``place_urgent`` picks instead of queueing — BATCH work waits where
-        LATENCY work scales out."""
+        LATENCY work scales out.
+
+        ``interconnect_bw`` (bytes/s) paces peer chunk transfers between
+        nodes with chunk caches, modeling the node-to-node fabric the same
+        way ``simulate_read_bw``/``simulate_upload_bw`` model storage and
+        PCIe (labeled benchmark runs only; None = instantaneous)."""
         if not nodes:
             raise ValueError("a cluster needs at least one node")
         self.catalog = catalog
@@ -459,10 +526,59 @@ class ClusterRouter:
         self.scale_out_queue_depth = scale_out_queue_depth
         self.latency_spill_depth = latency_spill_depth
         self.urgent_deadline_s = urgent_deadline_s
+        self.interconnect_bw = interconnect_bw
         self._lock = threading.Lock()
         self._closed = False
         self._assign: Dict[str, List[int]] = {}  # sticky fname -> node idxs
-        self.stats = {"routed": 0, "scale_outs": 0, "latency_steals": 0}
+        self.stats = {
+            "routed": 0,
+            "scale_outs": 0,
+            "latency_steals": 0,
+            "peer_fetches": 0,
+            "peer_fetch_bytes": 0,
+        }
+        self._wire_chunk_peers()
+
+    def _wire_chunk_peers(self) -> None:
+        """Connect every node's chunk cache to the cluster: residency
+        announcements feed the catalog's digest→holders index, and the
+        peer-fetch hook pulls a missing chunk from whichever peer holds it
+        (paced by ``interconnect_bw``) instead of re-reading the image
+        store.  The peer serves via ``peek`` — RAM first, else its local
+        CAS file — so a transfer never perturbs the holder's LRU."""
+        import time as _time
+
+        caches = {
+            n.name: n.chunks for n in self.nodes if n.chunks is not None
+        }
+        if not caches:
+            return
+
+        def make_fetch(self_name: str):
+            def fetch(digest: bytes) -> Optional[bytes]:
+                for holder in self.catalog.chunk_holders(digest):
+                    if holder == self_name:
+                        continue
+                    cache = caches.get(holder)
+                    if cache is None:
+                        continue
+                    data = cache.peek(digest)
+                    if data is None:
+                        continue  # stale index entry: try the next holder
+                    if self.interconnect_bw:
+                        _time.sleep(len(data) / self.interconnect_bw)
+                    with self._lock:
+                        self.stats["peer_fetches"] += 1
+                        self.stats["peer_fetch_bytes"] += len(data)
+                    return data
+                return None
+
+            return fetch
+
+        for name, cache in caches.items():
+            cache.node = name  # announce under the router-assigned name
+            cache.announce = self.catalog.announce_chunk
+            cache.peer_fetch = make_fetch(name)
 
     # ------------------------------------------------------------- routing
     def _probe(self) -> List[NodeLoad]:

@@ -46,6 +46,7 @@ from repro.core import (
     BufferPool,
     FunctionRegistry,
     FunctionSpec,
+    NodeChunkCache,
     NodeImageCache,
     PrefetchIOScheduler,
     SpiceRestorer,
@@ -210,6 +211,7 @@ class NodeScheduler:
         install: object = "eager",
         upload_depth: int = 2,
         simulate_upload_bw: Optional[float] = None,
+        chunks: Optional[NodeChunkCache] = None,
     ):
         """``install`` selects the device-install policy for restores on
         this node — "eager" (per-tensor device copy on the prefetcher
@@ -219,7 +221,11 @@ class NodeScheduler:
         (custom per-tensor transform, eager-style).  ``upload_depth`` sizes
         the fused path's upload ring (staging slots in flight);
         ``simulate_upload_bw`` models the interconnect roofline on the ring
-        (labeled benchmark runs only, like ``simulate_read_bw``)."""
+        (labeled benchmark runs only, like ``simulate_read_bw``).
+        ``chunks`` (a :class:`repro.core.chunkstore.NodeChunkCache` over
+        the cluster's shared CAS) enables content-addressed dedup on every
+        spice restore this node runs; its RAM tier attaches to the ledger
+        as rung 2."""
         self.name = name
         self.registry = registry or FunctionRegistry()
         self.node_cache = node_cache or NodeImageCache()
@@ -235,7 +241,10 @@ class NodeScheduler:
         )
         self.memory = memory or NodeMemoryManager(budget)
         self._pool.attach(self.memory)
-        self.node_cache.attach(self.memory)  # registers ladder rung 2
+        self.node_cache.attach(self.memory)  # registers ladder rung 3
+        self.chunks = chunks
+        if chunks is not None:
+            chunks.attach(self.memory)  # chunk-cas RAM tier, ladder rung 2
         self.install = install
         self.upload_stream: Optional[UploadStream] = None
         self.device_images: Optional[DeviceImageCache] = None
@@ -255,12 +264,14 @@ class NodeScheduler:
             self.device_images.attach(self.memory)
         # reclaim ladder: residual tails first (cheapest to re-restore),
         # then device-resident base pages (rung 1, above, fused nodes only),
-        # then recoverable host base images (rung 2, above), then idle pool
-        # staging (pure perf cache — without this rung the free list's
-        # charge would ratchet up unreclaimably), then LRU warm instances
+        # then RAM chunk-CAS demotions (rung 2, above, dedup nodes only —
+        # re-readable from the local disk CAS), then recoverable host base
+        # images (rung 3, above), then idle pool staging (pure perf cache —
+        # without this rung the free list's charge would ratchet up
+        # unreclaimably), then LRU warm instances
         self.memory.register_reclaimer("residual", self._reclaim_residual, order=0)
-        self.memory.register_reclaimer("pool", self._reclaim_pool, order=3)
-        self.memory.register_reclaimer("warm-lru", self._reclaim_warm_lru, order=4)
+        self.memory.register_reclaimer("pool", self._reclaim_pool, order=4)
+        self.memory.register_reclaimer("warm-lru", self._reclaim_warm_lru, order=5)
         self._instances: Dict[str, FunctionInstance] = {}
         self._ilock = threading.Lock()
         self._slock = threading.Lock()
@@ -530,6 +541,10 @@ class NodeScheduler:
         self._exec.shutdown(wait=False)
         if self.upload_stream is not None:
             self.upload_stream.close()
+        if self.chunks is not None:
+            # return this node's CAS references and ledger charge; chunks
+            # other holders still reference stay in the shared store
+            self.chunks.release_all()
 
     # ------------------------------------------------------------- eviction
     def evict(self, fname: Optional[str] = None, timeout: float = 30.0) -> None:
@@ -1092,6 +1107,7 @@ class NodeScheduler:
                 transform=transform, simulate_read_bw=sim_bw,
                 iosched=self.iosched, memory=self.memory,
                 stream_priority=io_priority, device_path=device_path,
+                chunks=self.chunks,
             )
             state, meta, handles, stats = restorer.restore(
                 spec.jif_path, wait=False, preloaded=preloaded,
@@ -1104,6 +1120,7 @@ class NodeScheduler:
                 transform=transform, simulate_read_bw=sim_bw,
                 iosched=self.iosched, memory=self.memory,
                 stream_priority=io_priority, device_path=device_path,
+                chunks=self.chunks,
             )
             state, meta, handles, stats = restorer.restore(
                 spec.jif_path, wait=True, preloaded=preloaded,
