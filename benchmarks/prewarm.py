@@ -1,0 +1,351 @@
+"""Predictive pre-warm scenario: the warmth policy engine vs reactive TTL.
+
+A heavy-tailed trace with bursty arrivals replays open-loop over a 2-node
+cluster three times, identical schedule, three warmth regimes:
+
+* ``reactive``        — static ``FixedTTLPolicy`` (short TTL, the SPES-style
+                        fleet-wide knob): the pre-policy baseline.
+* ``adaptive_nospec`` — ``PrewarmPolicy`` adaptive per-function TTLs fed by
+                        the arrival histogram, speculation OFF (the
+                        ablation separating the TTL win from speculation).
+* ``predictive``      — the full engine: adaptive TTLs + speculative
+                        BATCH-class restores ahead of predicted arrivals.
+
+The trace is zipf-flavored with three populations: a periodic *head*
+(LATENCY class, short periods — the arrival histogram's head, covered by
+adaptive TTLs), a periodic *sparse* set (LATENCY, periods beyond any sane
+keep-alive window — only speculation keeps them warm; this is where
+predictive beats adaptive-without-speculation), and a one-shot heavy
+*tail* (STANDARD — unpredictable, cold in every regime, the memory the
+policy must NOT burn).  Two bursts (head + tail) exercise joining under
+each regime.  Metrics come from the steady-state window after a learning
+prefix, standard practice for prediction-based keep-alive.
+
+Asserted (the PR's acceptance bar): predictive cold-start count ≤ 0.5× the
+reactive baseline; predictive ledger high-water ≤ 1.5× reactive (peak
+node); predictive LATENCY p99 TTFT no worse than reactive AND no worse
+than speculation-off (BATCH-class speculation must never dent the demand
+path); zero ledger-audit failures anywhere.  Merges into
+``BENCH_coldstart.json`` under ``"prewarm"``.
+"""
+from __future__ import annotations
+
+import tempfile
+import time
+
+import numpy as np
+
+from benchmarks.common import PROMPT, smoke
+
+BENCH_TARGET = "coldstart"
+SUMMARY_KEY = "prewarm"
+SUMMARY: dict = {}
+
+N_NODES = 2
+SIM_READ_BW = 1.5e8
+REACTIVE_TTL = 0.15   # the static keep-alive knob (and the adaptive fallback)
+TTL_MARGIN = 1.25
+MIN_OBS = 2           # gaps before the histogram drives TTLs/speculation
+
+
+def _smoke() -> bool:
+    return smoke()
+
+
+def _params():
+    """Trace + policy knobs, sized for CI smoke vs the full run."""
+    if _smoke():
+        return {
+            "span_s": 5.5, "warmup_s": 3.0,
+            "head_periods": (0.32, 0.42),
+            "sparse_periods": (1.1, 1.3),
+            "n_tail": 3,
+            "max_ttl_s": 0.8, "tail_ttl_s": 0.8, "horizon_s": 0.5,
+        }
+    return {
+        "span_s": 10.0, "warmup_s": 5.0,
+        "head_periods": (0.36, 0.44, 0.52),
+        "sparse_periods": (1.5, 1.7, 1.9),
+        "n_tail": 6,
+        "max_ttl_s": 1.0, "tail_ttl_s": 1.0, "horizon_s": 0.7,
+    }
+
+
+def _cfg():
+    import dataclasses
+
+    from repro.configs import get_config
+
+    cfg = get_config("qwen1.5-0.5b").reduced()
+    if not _smoke():
+        cfg = dataclasses.replace(
+            cfg, pattern_reps=8, n_layers=8, d_model=256, d_ff=512, head_dim=32
+        )
+    return cfg
+
+
+def _publish(catalog, cfg, dirpath, p):
+    import jax
+
+    from repro.models import lm
+
+    head = [f"head-{i}" for i in range(len(p["head_periods"]))]
+    sparse = [f"sparse-{i}" for i in range(len(p["sparse_periods"]))]
+    tail = [f"tail-{i}" for i in range(p["n_tail"])]
+    extra = {"opt": np.ones((1 << 20,), np.float32)}  # 4 MB residual tail
+    for i, fname in enumerate(head + sparse + tail):
+        params = lm.init_params(cfg, jax.random.PRNGKey(300 + i))
+        catalog.publish(fname, cfg, params, dirpath, warm_ttl_s=0.0,
+                        formats=("jif",), extra_state=extra)
+    return head, sparse, tail
+
+
+def _schedule(head, sparse, tail, p):
+    """Deterministic open-loop arrival list: (t, qos, fname, measured).
+    ``measured`` = the arrival lands after the learning prefix."""
+    from repro.serve.invocation import QosClass
+
+    span, warmup = p["span_s"], p["warmup_s"]
+    arrivals = []
+    # periodic head + sparse populations (phase-staggered so restores of
+    # different functions overlap — queues and joins actually form)
+    for fname, period, phase in (
+        [(f, per, 0.07 * i) for i, (f, per) in enumerate(zip(head, p["head_periods"]))]
+        + [(f, per, 0.23 + 0.31 * i)
+           for i, (f, per) in enumerate(zip(sparse, p["sparse_periods"]))]
+    ):
+        t = phase
+        while t < span:
+            arrivals.append((t, QosClass.LATENCY, fname, t >= warmup))
+            t += period
+    # heavy tail: one-shot functions spread over the measured window —
+    # unpredictable demand that must stay cold-and-cheap in every regime
+    window = span - warmup
+    for k, fname in enumerate(tail):
+        t = warmup + (k + 0.5) * window / max(len(tail), 1)
+        arrivals.append((t, QosClass.STANDARD, fname, True))
+    # bursts: 3 back-to-back arrivals of one head fn (warm/join under
+    # load) and of one tail fn (cold + two joiners) inside the window
+    for i in range(3):
+        arrivals.append((warmup + 0.4 * window + 0.01 * i,
+                         QosClass.LATENCY, head[0], True))
+        arrivals.append((warmup + 0.7 * window + 0.01 * i,
+                         QosClass.STANDARD, tail[0], True))
+    arrivals.sort(key=lambda a: a[0])
+    return arrivals
+
+
+def _build_router(catalog, cfg, p, regime):
+    from repro.serve.cluster import ClusterRouter, LocalityFirst
+    from repro.serve.invocation import AdmissionController
+    from repro.serve.node import FixedTTLPolicy, NodeScheduler
+    from repro.serve.prewarm import ArrivalTracker, PrewarmEngine, PrewarmPolicy
+
+    tracker = ArrivalTracker()
+
+    def policy():
+        if regime == "reactive":
+            return FixedTTLPolicy(REACTIVE_TTL)
+        return PrewarmPolicy(
+            tracker,
+            default_ttl_s=REACTIVE_TTL,  # unknown fns behave like reactive
+            max_ttl_s=p["max_ttl_s"],
+            tail_ttl_s=p["tail_ttl_s"],
+            ttl_margin=TTL_MARGIN,
+            min_observations=MIN_OBS,
+        )
+
+    nodes = [
+        NodeScheduler(
+            registry=catalog.registry,
+            name=f"node{i}",
+            max_workers=12,
+            reap_interval_s=0.05,  # TTL expiry must actually evict
+            admission=AdmissionController(max_queue_depth=64,
+                                          max_batch_queued=8,
+                                          max_batch_inflight=3),
+            keepalive=policy(),
+        )
+        for i in range(N_NODES)
+    ]
+    engine = None
+    if regime != "reactive":
+        engine = PrewarmEngine(
+            tracker,
+            horizon_s=p["horizon_s"],
+            interval_s=0.02,
+            max_inflight=4,
+            min_observations=MIN_OBS,
+            speculative=(regime == "predictive"),
+            simulate_read_bw=SIM_READ_BW,
+        )
+    router = ClusterRouter(catalog, nodes, placement=LocalityFirst(),
+                           latency_spill_depth=4, prewarm=engine)
+    return router, engine
+
+
+def _replay(router, arrivals, cfg):
+    from repro.serve.invocation import (
+        DeadlineExceeded,
+        Invocation,
+        Overloaded,
+    )
+
+    handles = []  # (qos, fname, measured, handle)
+    rejected = 0
+    t0 = time.perf_counter()
+    for t_arr, qos, fname, measured in arrivals:
+        delay = t_arr - (time.perf_counter() - t0)
+        if delay > 0:
+            time.sleep(delay)
+        inv = Invocation(function=fname, prompt=PROMPT, max_new_tokens=2,
+                         cfg=cfg, simulate_read_bw=SIM_READ_BW, qos=qos)
+        try:
+            handles.append((qos, fname, measured, router.submit_invocation(inv)))
+        except (Overloaded, DeadlineExceeded):
+            rejected += 1
+    return handles, rejected
+
+
+def _run_regime(regime, catalog, cfg, arrivals, p) -> dict:
+    from repro.serve.invocation import QosClass
+
+    router, engine = _build_router(catalog, cfg, p, regime)
+    try:
+        handles, rejected = _replay(router, arrivals, cfg)
+        results = []
+        failed = 0
+        for qos, fname, measured, h in handles:
+            try:
+                results.append((qos, measured, h.result(120)))
+            except Exception:
+                failed += 1
+        if engine is not None:
+            engine.stop()
+            engine.drain(30.0)
+        router.drain_residual()
+
+        audit_failures = 0
+        for n in router.nodes:
+            try:
+                n.memory.audit()
+            except AssertionError:
+                audit_failures += 1
+        hw = {n.name: n.memory.high_water() for n in router.nodes}
+        spec_restores = sum(n.stats["speculative_restores"] for n in router.nodes)
+        spec_redundant = sum(n.stats["prewarm_redundant"] for n in router.nodes)
+        demand_colds = sum(n.stats["cold_starts"] for n in router.nodes)
+    finally:
+        router.close()
+
+    meas = [(q, r) for q, m, r in results if m]
+    lat = [r.queue_wait_s + r.ttft_s for q, r in meas if q is QosClass.LATENCY]
+    out = {
+        "submitted": len(handles) + rejected,
+        "rejected": rejected,
+        "failed": failed,
+        "measured": len(meas),
+        # a cold start = a real request that had to wait on a restore
+        # initiated on its own behalf (joins ride someone else's)
+        "cold": sum(1 for _, r in meas if r.cold and not r.joined),
+        "joined": sum(1 for _, r in meas if r.joined),
+        "warm": sum(1 for _, r in meas if not r.cold),
+        "latency_ttft_p50_s": float(np.percentile(lat, 50)) if lat else None,
+        "latency_ttft_p99_s": float(np.percentile(lat, 99)) if lat else None,
+        "node_cold_starts_total": demand_colds,
+        "speculative_restores": spec_restores,
+        "prewarm_redundant": spec_redundant,
+        "audit_failures": audit_failures,
+        "per_node_high_water_bytes": hw,
+        "hw_max_node_bytes": max(h.get("total", 0) for h in hw.values()),
+        "hw_sum_bytes": sum(h.get("total", 0) for h in hw.values()),
+        "engine": dict(engine.stats) if engine is not None else None,
+    }
+    return out
+
+
+def run() -> list:
+    from repro.serve.cluster import FunctionCatalog
+    from repro.serve.node import NodeScheduler
+
+    cfg = _cfg()
+    p = _params()
+    rows: list = []
+    SUMMARY.clear()
+
+    with tempfile.TemporaryDirectory() as d:
+        catalog = FunctionCatalog()
+        head, sparse, tail = _publish(catalog, cfg, d, p)
+        # compile-cache warmup on a throwaway node (shared jit cache)
+        warm_node = NodeScheduler(registry=catalog.registry)
+        warm_node.invoke(head[0], PROMPT, max_new_tokens=2, mode="spice_sync",
+                         cfg=cfg)
+        arrivals = _schedule(head, sparse, tail, p)
+
+        regimes = {}
+        for regime in ("reactive", "adaptive_nospec", "predictive"):
+            regimes[regime] = _run_regime(regime, catalog, cfg, arrivals, p)
+
+    rea, nos, pred = (regimes["reactive"], regimes["adaptive_nospec"],
+                      regimes["predictive"])
+    cold_ratio = pred["cold"] / max(rea["cold"], 1)
+    hw_ratio = pred["hw_max_node_bytes"] / max(rea["hw_max_node_bytes"], 1)
+    p99_vs_reactive = (
+        pred["latency_ttft_p99_s"] / max(rea["latency_ttft_p99_s"], 1e-12)
+    )
+    p99_vs_nospec = (
+        pred["latency_ttft_p99_s"] / max(nos["latency_ttft_p99_s"], 1e-12)
+    )
+    audit_failures = sum(r["audit_failures"] for r in regimes.values())
+    SUMMARY.update({
+        "nodes": N_NODES,
+        "head_functions": len(head),
+        "sparse_functions": len(sparse),
+        "tail_functions": len(tail),
+        "span_s": p["span_s"],
+        "warmup_s": p["warmup_s"],
+        "sim_read_bw": SIM_READ_BW,
+        "reactive_ttl_s": REACTIVE_TTL,
+        "max_ttl_s": p["max_ttl_s"],
+        "horizon_s": p["horizon_s"],
+        "regimes": regimes,
+        "cold_vs_reactive": cold_ratio,
+        "hw_vs_reactive": hw_ratio,
+        "p99_vs_reactive": p99_vs_reactive,
+        "p99_vs_nospec": p99_vs_nospec,
+        "audit_failures": audit_failures,
+    })
+    for name, r in regimes.items():
+        rows.append((f"prewarm/{name}_cold", float(r["cold"]), "cold starts"))
+        rows.append((f"prewarm/{name}_latency_p99",
+                     (r["latency_ttft_p99_s"] or 0) * 1e6, ""))
+    rows.append(("prewarm/cold_vs_reactive", cold_ratio, "x (must be <=0.5)"))
+    rows.append(("prewarm/hw_vs_reactive", hw_ratio, "x (must be <=1.5)"))
+    rows.append(("prewarm/p99_vs_nospec", p99_vs_nospec, "x (must be <=1.05)"))
+    rows.append(("prewarm/speculative_restores",
+                 float(pred["speculative_restores"]), ""))
+
+    # ---- the PR's acceptance bar, enforced where the numbers are made ----
+    assert audit_failures == 0, "ledger audit failed under the prewarm trace"
+    assert pred["speculative_restores"] > 0, (
+        "predictive regime never speculated — the engine is not firing"
+    )
+    assert cold_ratio <= 0.5, (
+        f"predictive cold starts {pred['cold']} must be <= 0.5x reactive "
+        f"{rea['cold']} (got {cold_ratio:.3f})"
+    )
+    assert hw_ratio <= 1.5, (
+        f"predictive peak-node high-water {pred['hw_max_node_bytes']/1e6:.1f} MB "
+        f"must be <= 1.5x reactive {rea['hw_max_node_bytes']/1e6:.1f} MB "
+        f"(got {hw_ratio:.2f}x)"
+    )
+    assert p99_vs_reactive <= 1.05, (
+        f"predictive LATENCY p99 {pred['latency_ttft_p99_s']:.4f}s must not "
+        f"exceed reactive {rea['latency_ttft_p99_s']:.4f}s"
+    )
+    assert p99_vs_nospec <= 1.05, (
+        f"BATCH-class speculation dented LATENCY p99: "
+        f"{pred['latency_ttft_p99_s']:.4f}s vs speculation-off "
+        f"{nos['latency_ttft_p99_s']:.4f}s"
+    )
+    return rows

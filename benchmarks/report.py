@@ -120,6 +120,54 @@ def dedup_table(dd) -> str:
     return "\n".join(out)
 
 
+def prewarm_table(pw) -> str:
+    """Markdown for the ``"prewarm"`` key: per-regime cold/warm/joined
+    counts, LATENCY p99 TTFT, peak-node memory, and the acceptance
+    ratios (cold reduction vs memory premium vs p99 impact)."""
+    out = [
+        "#### Warmth policy engine "
+        f"({pw.get('head_functions', '?')} head / "
+        f"{pw.get('sparse_functions', '?')} sparse / "
+        f"{pw.get('tail_functions', '?')} tail fns over "
+        f"{pw.get('nodes', '?')} nodes, {pw.get('span_s', '?')} s trace)",
+        "",
+        "| regime | cold | joined | warm | p50 ttft (ms) | p99 ttft (ms) |"
+        " speculative | peak node mem (MB) | audit fail |",
+        "|---|---|---|---|---|---|---|---|---|",
+    ]
+    order = ("reactive", "adaptive_nospec", "predictive")
+    regimes = pw.get("regimes", {})
+    for rname in [r for r in order if r in regimes] + sorted(
+        set(regimes) - set(order)
+    ):
+        r = regimes[rname]
+
+        def ms(v):
+            return "—" if v is None else f"{v*1e3:.2f}"
+        out.append(
+            f"| {rname} | {r['cold']} | {r['joined']} | {r['warm']} | "
+            f"{ms(r.get('latency_ttft_p50_s'))} | "
+            f"{ms(r.get('latency_ttft_p99_s'))} | "
+            f"{r.get('speculative_restores', 0)} | "
+            f"{r.get('hw_max_node_bytes', 0)/1e6:.1f} | "
+            f"{r.get('audit_failures', '?')} |"
+        )
+    cold = pw.get("cold_vs_reactive")
+    if cold is not None:
+        out.append("")
+        out.append(
+            f"predictive cold / reactive = **{cold:.3f}** (must be <=0.5) at "
+            f"**{pw.get('hw_vs_reactive', 0):.2f}x** reactive peak-node "
+            f"memory (must be <=1.5); LATENCY p99 vs reactive "
+            f"**{pw.get('p99_vs_reactive', 0):.3f}x**, vs speculation-off "
+            f"**{pw.get('p99_vs_nospec', 0):.3f}x** (each must be <=1.05)"
+        )
+    if pw.get("error"):
+        out.append(f"**SCENARIO FAILED**: {pw['error']}")
+    out.append("")
+    return "\n".join(out)
+
+
 def coldstart_tables(d) -> str:
     """Markdown for BENCH_coldstart.json: per-mode TTFT, delta economics,
     memory-pressure high-water marks, and the cluster placement table."""
@@ -288,6 +336,9 @@ def coldstart_tables(d) -> str:
         if dr.get("error"):
             out.append(f"**SCENARIO FAILED**: {dr['error']}")
             out.append("")
+    pw = d.get("prewarm")
+    if pw:
+        out.append(prewarm_table(pw))
     return "\n".join(out) if out else "_no BENCH_coldstart.json data_"
 
 
@@ -296,7 +347,8 @@ def main():
     ap.add_argument("--tag", default="")
     ap.add_argument(
         "--section", default="all",
-        choices=["dryrun", "roofline", "coldstart", "dedup", "both", "all"],
+        choices=["dryrun", "roofline", "coldstart", "dedup", "prewarm",
+                 "both", "all"],
     )
     args = ap.parse_args()
     cells = load(args.tag)
@@ -324,6 +376,16 @@ def main():
             print(dedup_table(dd))
         else:
             print("_no dedup data — run benchmarks.run --only dedup first_")
+    if args.section == "prewarm":
+        print("### Warmth-policy table\n")
+        pw = (
+            json.loads(COLDSTART.read_text()).get("prewarm")
+            if COLDSTART.exists() else None
+        )
+        if pw:
+            print(prewarm_table(pw))
+        else:
+            print("_no prewarm data — run benchmarks.run --only prewarm first_")
 
 
 if __name__ == "__main__":

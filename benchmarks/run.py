@@ -44,6 +44,7 @@ MODULES = [
     "cluster",
     "dedup",
     "qos",
+    "prewarm",
     "restore_bandwidth",
     "roofline",
 ]
@@ -101,6 +102,26 @@ def main() -> None:
         if summary:
             out = _write_summary(name, mod, summary)
             print(f"# wrote {out}", flush=True)
+        # merge regression guard: a module that declares a SUMMARY_KEY
+        # must actually land it (or its error stamp) in the shared file —
+        # an empty SUMMARY silently skips _write_summary, and that is
+        # exactly the failure mode that left qos absent from
+        # BENCH_coldstart.json for two releases
+        if mod is not None and getattr(mod, "SUMMARY_KEY", None):
+            target = getattr(mod, "BENCH_TARGET", name)
+            out = REPO_ROOT / f"BENCH_{target}.json"
+            landed = False
+            try:
+                landed = mod.SUMMARY_KEY in json.loads(out.read_text())
+            except (OSError, json.JSONDecodeError):
+                pass
+            if not landed:
+                failures += 1
+                print(
+                    f"{name},nan,ERROR:summary key "
+                    f"{mod.SUMMARY_KEY!r} never landed in {out.name}",
+                    flush=True,
+                )
         print(f"# {name} finished in {time.time()-t0:.1f}s", flush=True)
     if failures:
         raise SystemExit(f"{failures} benchmark modules failed")

@@ -131,6 +131,54 @@ class RestoreStats:
         return d
 
 
+def estimate_rerestore_cost(
+    stats: Optional[RestoreStats],
+    *,
+    image_bytes: int = 0,
+    ws_pinned: bool = False,
+    residual_bytes: int = 0,
+    chunks_hot: bool = False,
+    device_base_resident: bool = False,
+) -> int:
+    """Estimated storage-pull bytes to bring an instance back after
+    eviction — the currency cost-aware eviction ranks candidates in
+    (:class:`repro.serve.prewarm.PrewarmPolicy`).
+
+    Baseline: what the LAST restore actually pulled (``stats.bytes_read``
+    already discounts base-image memcpys, zero pages, chunk-cache hits
+    and pinned-ws reuse).  Refinements, cheapest state first:
+
+    * ``ws_pinned`` — a residual-evicted instance re-reads only the
+      dropped residual share of the image (``residual_bytes`` of
+      ``stats.image_bytes``); a fully pinned ws with no residual left
+      costs ~nothing.
+    * ``chunks_hot`` — the pull lands through a node chunk cache whose
+      CAS already holds the image's chunks (the last restore ingested
+      them): re-reads come from the node-local CAS, not the image
+      store — order-of-magnitude cheaper, not free (disk + verify).
+    * ``device_base_resident`` — the HBM base survives eviction in the
+      DeviceImageCache, shaving the re-upload (a mild discount here:
+      this estimate prices storage, not PCIe).
+
+    Returns >= 1 so penalty ratios stay well-defined; a stats-less
+    instance (never restored through spice) prices at its full logical
+    size — unknown is expensive, evict it last among equals."""
+    if stats is None:
+        return max(int(image_bytes), 1)
+    total = stats.image_bytes or image_bytes
+    paid = stats.bytes_read
+    if ws_pinned:
+        if total > 0 and residual_bytes > 0:
+            paid = int(paid * min(1.0, residual_bytes / total))
+        else:
+            paid = 0
+    if chunks_hot:
+        paid //= 16
+    if device_base_resident:
+        paid = int(paid * 0.9)
+    return max(paid, 1)
+
+
 class TensorHandle:
     """Tracked-completion handle (the anti-madvise): ``wait`` blocks until
     the tensor is materialized; ``ready`` never lies.  Waiting on an unread

@@ -2,7 +2,14 @@
 with cold restores (the Spice serving loop).
 
   PYTHONPATH=src python -m repro.launch.serve --arch qwen1.5-0.5b \
-      --requests 8 --mode spice [--keep-warm]
+      --requests 8 --mode spice [--keep-warm | --prewarm]
+
+Warmth modes:
+  (none)       every request is a cold start (no keep-alive)
+  --keep-warm  reactive: static 300 s keep-alive TTL (the pre-policy knob)
+  --prewarm    predictive: adaptive per-function TTLs from the arrival
+               histogram (PrewarmPolicy) + speculative restores ahead of
+               the predicted next arrival (PrewarmEngine)
 """
 import argparse
 import tempfile
@@ -13,7 +20,13 @@ import numpy as np
 
 from repro.configs import get_config
 from repro.models import lm
-from repro.serve.engine import ServerlessNode
+from repro.serve.engine import (
+    ArrivalTracker,
+    FixedTTLPolicy,
+    PrewarmEngine,
+    PrewarmPolicy,
+    ServerlessNode,
+)
 
 
 def main() -> None:
@@ -26,15 +39,38 @@ def main() -> None:
     ap.add_argument("--mode", default="spice",
                     choices=["spice", "spice_sync", "criu_star", "reap_star",
                              "faasnap_star"])
-    ap.add_argument("--keep-warm", action="store_true")
+    ap.add_argument("--interval", type=float, default=0.0,
+                    help="seconds between requests (gives --prewarm a "
+                         "periodic arrival pattern to learn)")
+    warmth = ap.add_mutually_exclusive_group()
+    warmth.add_argument("--keep-warm", action="store_true",
+                        help="reactive keep-alive: static 300 s TTL")
+    warmth.add_argument("--prewarm", action="store_true",
+                        help="predictive: adaptive TTLs + speculative "
+                             "restores from the arrival histogram")
     args = ap.parse_args()
 
     cfg = get_config(args.arch).reduced()
     params = lm.init_params(cfg, jax.random.PRNGKey(0))
-    node = ServerlessNode()
+    if args.prewarm:
+        tracker = ArrivalTracker()
+        node = ServerlessNode(
+            keepalive=PrewarmPolicy(
+                tracker, default_ttl_s=0.0, max_ttl_s=300.0,
+                min_observations=2,
+            ),
+            prewarm=PrewarmEngine(
+                tracker, horizon_s=max(0.3, args.interval),
+                interval_s=0.05, min_observations=2,
+            ),
+            reap_interval_s=0.25,
+        )
+    elif args.keep_warm:
+        node = ServerlessNode(keepalive=FixedTTLPolicy(300.0))
+    else:
+        node = ServerlessNode()  # spec TTL 0: every request restores
     with tempfile.TemporaryDirectory() as d:
-        node.publish("fn", cfg, params, d,
-                     warm_ttl_s=300.0 if args.keep_warm else 0.0)
+        node.publish("fn", cfg, params, d)
         prompt = np.tile(np.arange(1, args.prompt_len + 1, dtype=np.int32),
                          (args.batch, 1))
         # compile-cache warmup
@@ -43,12 +79,20 @@ def main() -> None:
 
         print(f"{'req':>4} {'path':>6} {'ttft_ms':>9} {'total_ms':>9}")
         for i in range(args.requests):
-            if not args.keep_warm:
+            if not (args.keep_warm or args.prewarm):
                 node.evict()
             r = node.invoke("fn", prompt, args.max_new, mode=args.mode, cfg=cfg)
-            print(f"{i:>4} {('warm' if not r.cold else args.mode):>6} "
+            path = "warm" if not r.cold else ("join" if r.joined else args.mode)
+            print(f"{i:>4} {path:>6} "
                   f"{r.ttft_s*1e3:9.2f} {r.total_s*1e3:9.2f}")
+            if args.interval:
+                time.sleep(args.interval)
         print("pool:", node.pool.stats)
+        if args.prewarm:
+            eng = node.router.prewarm
+            eng.drain(5.0)
+            print("prewarm:", {k: v for k, v in eng.stats.items() if v})
+        node.close()
 
 
 if __name__ == "__main__":

@@ -108,6 +108,10 @@ class FunctionCatalog:
         # every image's chunks, so delta chains and sibling fine-tunes never
         # store an identical chunk twice; None = dedup off
         self.chunk_store = chunk_store
+        # warmth-policy feed (repro.serve.prewarm.ArrivalTracker): wired by
+        # a router with a PrewarmEngine; record_access (a warm generation on
+        # live traffic) counts as demand evidence for the function too
+        self.arrival_tracker = None
         self._lock = threading.Lock()
         # recorded first-touch orders from warm generations (relayout feed)
         self._recorded: Dict[str, List[str]] = {}
@@ -288,6 +292,8 @@ class FunctionCatalog:
         order = node.trace_warm(fname, prompt, max_new_tokens, cfg)
         with self._lock:
             self._recorded[fname] = order
+        if self.arrival_tracker is not None:
+            self.arrival_tracker.record(fname)
         return order
 
     def recorded_order(self, fname: str) -> Optional[List[str]]:
@@ -494,6 +500,7 @@ class ClusterRouter:
         latency_spill_depth: int = 2,
         urgent_deadline_s: float = 1.0,
         interconnect_bw: Optional[float] = None,
+        prewarm=None,
     ):
         """``latency_spill_depth``: an urgent invocation (LATENCY class, or
         a deadline within ``urgent_deadline_s``) whose sticky replica has
@@ -504,7 +511,14 @@ class ClusterRouter:
         ``interconnect_bw`` (bytes/s) paces peer chunk transfers between
         nodes with chunk caches, modeling the node-to-node fabric the same
         way ``simulate_read_bw``/``simulate_upload_bw`` model storage and
-        PCIe (labeled benchmark runs only; None = instantaneous)."""
+        PCIe (labeled benchmark runs only; None = instantaneous).
+
+        ``prewarm`` (a :class:`repro.serve.prewarm.PrewarmEngine`) turns
+        on predictive warmth management: every real ``submit_invocation``
+        feeds its arrival tracker, and the engine speculates restores
+        back through this router (BATCH class, ``prewarm=True``) so
+        placement, admission, QoS ordering and restore joining all apply
+        unchanged.  ``close()`` stops the engine with the fleet."""
         if not nodes:
             raise ValueError("a cluster needs at least one node")
         self.catalog = catalog
@@ -538,6 +552,9 @@ class ClusterRouter:
             "peer_fetch_bytes": 0,
         }
         self._wire_chunk_peers()
+        self.prewarm = prewarm
+        if prewarm is not None:
+            prewarm.attach(self)
 
     def _wire_chunk_peers(self) -> None:
         """Connect every node's chunk cache to the cluster: residency
@@ -673,6 +690,11 @@ class ClusterRouter:
         node (typed ``Overloaded`` / ``DeadlineExceeded`` raise here)."""
         if self._closed:
             raise Overloaded("router is closed")
+        if self.prewarm is not None and not inv.prewarm:
+            # feed the arrival histogram BEFORE placement (arrival time is
+            # submit time); the engine's own speculations never count as
+            # demand, or prediction would feed back on itself
+            self.prewarm.on_arrival(inv.function)
         idx = self._pick(inv.function, inv)
         return self.nodes[idx].submit_invocation(inv)
 
@@ -735,6 +757,8 @@ class ClusterRouter:
             if self._closed:
                 return
             self._closed = True
+        if self.prewarm is not None:
+            self.prewarm.stop()
         for n in self.nodes:
             n.close()
 

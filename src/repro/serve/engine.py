@@ -58,6 +58,11 @@ from repro.serve.node import (
     NodeScheduler,
     NoKeepAlive,
 )
+from repro.serve.prewarm import (  # re-exported: the warmth policy engine
+    ArrivalTracker,
+    PrewarmEngine,
+    PrewarmPolicy,
+)
 
 __all__ = [
     "ServerlessNode",
@@ -76,6 +81,9 @@ __all__ = [
     "KeepAlivePolicy",
     "FixedTTLPolicy",
     "NoKeepAlive",
+    "ArrivalTracker",
+    "PrewarmPolicy",
+    "PrewarmEngine",
     "FunctionCatalog",
     "ClusterRouter",
     "PlacementPolicy",
@@ -108,6 +116,7 @@ class ServerlessNode:
         pool: Optional[BufferPool] = None,
         scheduler: Optional[NodeScheduler] = None,
         catalog: Optional[FunctionCatalog] = None,
+        prewarm: Optional[PrewarmEngine] = None,
         **scheduler_kwargs,
     ):
         if scheduler is None and catalog is not None and node_cache is None:
@@ -122,7 +131,9 @@ class ServerlessNode:
         self._catalog = catalog or FunctionCatalog(
             registry=self._sched.registry, base_images=self._sched.node_cache
         )
-        self._router = ClusterRouter(self._catalog, [self._sched])
+        self._router = ClusterRouter(
+            self._catalog, [self._sched], prewarm=prewarm
+        )
 
     # shared-component accessors (benchmarks swap the pool between runs)
     @property

@@ -137,6 +137,10 @@ class Invocation:
     qos: QosClass = QosClass.STANDARD
     deadline_s: Optional[float] = None
     priority: int = 0
+    # speculative pre-warm (PrewarmEngine): restore + promote but skip
+    # generation; a no-op when the function is already warm/restoring.
+    # Never fed back into the arrival tracker.
+    prewarm: bool = False
 
     def remaining_s(self, now: Optional[float] = None) -> Optional[float]:
         if self.deadline_s is None:

@@ -57,7 +57,7 @@ from repro.core.memory import (
     MemoryPressureError,
     NodeMemoryManager,
 )
-from repro.core.restore import RestoreStats
+from repro.core.restore import RestoreStats, estimate_rerestore_cost
 from repro.core.trace import AccessRecorder
 from repro.core.upload import DeviceImageCache, DevicePath, UploadStream
 from repro.serve.invocation import (
@@ -139,6 +139,10 @@ class NodeLoad:
     # fires after ~latency_spill_depth of them.
 
 
+# a prewarm invocation's result carries no generation output
+_EMPTY_TOKENS = np.zeros((0,), np.int32)
+
+
 def _cancel_collateral(exc: BaseException) -> bool:
     """True when ``exc`` was caused by SOMEONE ELSE cancelling the restore
     this invocation merely rode (the cause chain bottoms out in
@@ -163,8 +167,15 @@ class KeepAlivePolicy:
     def victims(
         self, warm: List[FunctionInstance], need_evict: int
     ) -> List[FunctionInstance]:
-        """Pick eviction order among idle warm instances (LRU)."""
-        return sorted(warm, key=lambda i: i.last_used)
+        """Pick AT MOST ``need_evict`` idle warm instances to sacrifice,
+        in eviction order (LRU-first here).  ``need_evict`` is the
+        caller's upper bound on how many evictions could possibly be
+        needed — honoring it keeps a large warm set from being fully
+        sorted (and lets policies stop scoring early); the caller still
+        stops as soon as enough bytes came back."""
+        return heapq.nsmallest(
+            max(0, need_evict), warm, key=lambda i: i.last_used
+        )
 
 
 class FixedTTLPolicy(KeepAlivePolicy):
@@ -232,6 +243,11 @@ class NodeScheduler:
         self._pool = pool or BufferPool()
         self.iosched = iosched or PrefetchIOScheduler(name="node-iosched")
         self.keepalive = keepalive or KeepAlivePolicy()
+        # a cost-aware policy (PrewarmPolicy) adopts this node's residency-
+        # aware re-restore estimate for its eviction ranking
+        bind = getattr(self.keepalive, "bind_node", None)
+        if callable(bind):
+            bind(self)
         # ONE ledger covers everything competing for node RAM: pool staging
         # buffers, cached base images, warm working sets, residual tails,
         # snapshot scratch.  The budget is an invariant of the manager, not
@@ -310,6 +326,8 @@ class NodeScheduler:
             "rejected_overloaded": 0,
             "rejected_deadline": 0,
             "cancellations": 0,
+            "speculative_restores": 0,  # prewarm invocations that restored
+            "prewarm_redundant": 0,     # prewarms finding warm/restoring state
         }
         if reap_interval_s is not None:
             self.start_reaper(reap_interval_s)
@@ -690,6 +708,28 @@ class NodeScheduler:
         with self._ilock:
             return self._instances.get(fname)
 
+    def rerestore_cost(self, inst: FunctionInstance) -> int:
+        """Estimated storage-pull bytes to bring ``inst`` back if evicted
+        now — this node's residency (chunk CAS, HBM bases) folded into
+        the instance-level estimate.  Cost-aware keep-alive policies
+        (``PrewarmPolicy``) rank eviction candidates with it."""
+        return estimate_rerestore_cost(
+            inst.restore_stats,
+            image_bytes=inst.memory_bytes,
+            ws_pinned=inst.ws_pinned is not None,
+            residual_bytes=(
+                inst.residual_region.nbytes
+                if inst.residual_region is not None else 0
+            ),
+            # the last spice restore ingested every pulled chunk into the
+            # node CAS, so a re-read comes from local disk, not the store
+            chunks_hot=self.chunks is not None,
+            device_base_resident=(
+                self.device_images is not None
+                and self.device_images.resident_bytes() > 0
+            ),
+        )
+
     # ------------------------------------------------- residual finalization
     def _watch_residual(self, fname, inst, state, getter, stats) -> None:
         """Track a WARMING instance's residual stream and finalize WARM (on
@@ -789,7 +829,14 @@ class NodeScheduler:
         prompt, max_new_tokens = inv.prompt, inv.max_new_tokens
         mode = inv.mode
         spec = self.registry.get(fname)
-        cfg = inv.cfg or get_config(spec.arch)
+        cfg = inv.cfg
+        if cfg is None:
+            # cfg-less invocations (speculative pre-warms) reuse the cfg the
+            # function's prior real traffic ran with; named-arch lookup is
+            # the last resort (reduced/bench variants aren't in the table)
+            with self._ilock:
+                prior = self._instances.get(fname)
+            cfg = prior.cfg if prior is not None else get_config(spec.arch)
         t0 = time.perf_counter()
         queue_s = t0 - t_submit
         self._bump("invocations")
@@ -806,8 +853,20 @@ class NodeScheduler:
                     # WARMING counts as warm: the working set is resident;
                     # generation stays layer-gated over the residual handles
                     role = "warm"
-                    inst.counters["warm_hits"] += 1
-                    inst.last_used = now
+                    if not inv.prewarm:
+                        # a speculative probe finding warm state is a no-op:
+                        # it must not refresh recency or the TTL window
+                        inst.counters["warm_hits"] += 1
+                        inst.last_used = now
+                        if inst.state is InstanceState.WARM:
+                            # sliding keep-alive: every real hit re-derives
+                            # the window (adaptive policies shrink/grow it
+                            # as the arrival histogram evolves)
+                            ttl = self.keepalive.ttl_for(spec)
+                            if ttl > 0:
+                                inst.warm_expiry = max(
+                                    inst.warm_expiry, now + ttl
+                                )
                     tree, getter = inst.tree, inst.getter
                     inst.inflight += 1
                 elif inst.state is InstanceState.RESTORING:
@@ -832,6 +891,15 @@ class NodeScheduler:
                 handle._pin()  # state resident: cancel is a no-op from here
                 handle.record(EVT_WS_READY)
                 handle.record(EVT_RUNNING)
+                if inv.prewarm:
+                    # speculation raced a real arrival (or a stale
+                    # prediction): the state it wanted resident already is
+                    self._bump("prewarm_redundant")
+                    return InvokeResult(
+                        _EMPTY_TOKENS, cold=False, mode="prewarm",
+                        total_s=time.perf_counter() - t0,
+                        function=fname, queue_s=queue_s, node=self.name,
+                    )
                 toks, ttft = generate(cfg, getter, tree, prompt, max_new_tokens)
                 dt = time.perf_counter() - t0
                 self._bump("warm_hits")
@@ -844,6 +912,15 @@ class NodeScheduler:
                 handle.record(EVT_RESTORING)
                 if inst.ws_ready:
                     handle.record(EVT_WS_READY)
+                if inv.prewarm:
+                    # someone else (most likely the real invocation the
+                    # speculation aimed at) owns the restore: nothing to add
+                    self._bump("prewarm_redundant")
+                    return InvokeResult(
+                        _EMPTY_TOKENS, cold=True, mode="prewarm",
+                        total_s=time.perf_counter() - t0, joined=True,
+                        function=fname, queue_s=queue_s, node=self.name,
+                    )
                 handle.record(EVT_RUNNING)
                 toks, ttft = generate(cfg, getter, tree, prompt, max_new_tokens)
                 dt = time.perf_counter() - t0
@@ -891,7 +968,14 @@ class NodeScheduler:
                         handle.record(EVT_WS_READY)
                 restore_wait = time.perf_counter() - t0  # sync restore part
                 handle.record(EVT_RUNNING)
-                toks, ttft = generate(cfg, getter, state, prompt, max_new_tokens)
+                if inv.prewarm:
+                    # speculative restore: promote to warm below, but there
+                    # is no request to serve — generation is skipped
+                    toks, ttft = _EMPTY_TOKENS, 0.0
+                else:
+                    toks, ttft = generate(
+                        cfg, getter, state, prompt, max_new_tokens
+                    )
                 ttl = self.keepalive.ttl_for(spec)
                 now = time.time()
                 if (
@@ -927,12 +1011,15 @@ class NodeScheduler:
                 with inst.cond:
                     inst.abort_restore()
                 raise
-            self._bump("cold_starts")
+            # a speculative restore is accounted apart from demand cold
+            # starts: the whole point is that it happens BEFORE a request
+            # needs it, so it must not inflate the cold-start count
+            self._bump("speculative_restores" if inv.prewarm else "cold_starts")
             if ttl > 0:
                 self._charge_warm_instance(inst)
                 self._enforce_budget(keep=fname)
             return InvokeResult(
-                toks, cold=True, mode=mode,
+                toks, cold=True, mode="prewarm" if inv.prewarm else mode,
                 restore_wait_s=restore_wait,
                 ttft_s=restore_wait + ttft,  # time-to-first-token from request
                 total_s=total,
