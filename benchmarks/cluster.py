@@ -145,7 +145,11 @@ def _run_policy(catalog, cfg, policy, fnames, schedule, rows):
     burst = [f.result() for f in futs]
     burst_nodes = {r.node for r in burst}
     real_colds = sum(1 for r in burst if r.cold and not r.joined)
-    duplicate_concurrent_colds = max(0, real_colds - 1) if policy.sticky else None
+    # computed for EVERY policy: non-sticky placement spreads the burst
+    # across nodes, and each extra node that cold-restores is a duplicate
+    # concurrent cold — exactly the waste sticky join routing eliminates
+    # (this used to be None for non-sticky policies, hiding their cost)
+    duplicate_concurrent_colds = max(0, real_colds - 1)
     router.drain_residual()
 
     audits = router.audit()  # raises if any node's ledger invariant broke

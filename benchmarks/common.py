@@ -133,6 +133,79 @@ def fn_config(fname: str):
 PROMPT = np.arange(1, 9, dtype=np.int32).reshape(1, 8)
 
 
+# ------------------------------------------------------- trace generation
+@dataclasses.dataclass(frozen=True)
+class TraceSpec:
+    """Declarative, seeded workload for open-loop trace replay.
+
+    The shape mirrors production serverless traces: a zipf-popular
+    function mix (``zipf_s``), a diurnal rate swing (sinusoidal around
+    ``base_rps``, ±``diurnal_amplitude``), and flash crowds — short
+    ``flash_rps`` bursts of LATENCY-class traffic aimed at an unpopular
+    (hence likely-cold) function.  Same seed → same trace, across
+    processes and runs."""
+
+    functions: Tuple[str, ...]
+    duration_s: float = 20.0
+    base_rps: float = 4.0
+    zipf_s: float = 1.1
+    diurnal_amplitude: float = 0.6
+    diurnal_period_s: float = 0.0  # 0 = one full cycle over the duration
+    flash_crowds: int = 1
+    flash_rps: float = 20.0
+    flash_duration_s: float = 2.0
+    # (QosClass value, weight) mix for the background process
+    qos_mix: Tuple[Tuple[str, float], ...] = (
+        ("latency", 0.3), ("standard", 0.5), ("batch", 0.2),
+    )
+    seed: int = 42
+
+
+def generate_trace(spec: TraceSpec) -> List[Tuple[float, str, str]]:
+    """``[(arrival_s, qos_value, fname), ...]`` sorted by arrival time.
+
+    The background process is a non-homogeneous Poisson process (thinning
+    against the diurnal peak rate); flash crowds are appended uniformly
+    over their burst window.  Everything draws from one seeded
+    ``default_rng`` — the trace is a pure function of the spec."""
+    import math
+
+    rng = np.random.default_rng(spec.seed)
+    ranks = np.arange(1, len(spec.functions) + 1, dtype=np.float64)
+    pop = ranks ** -spec.zipf_s
+    pop /= pop.sum()
+    qos_names = [q for q, _ in spec.qos_mix]
+    qos_w = np.array([w for _, w in spec.qos_mix], dtype=np.float64)
+    qos_w /= qos_w.sum()
+    period = spec.diurnal_period_s or spec.duration_s
+
+    events: List[Tuple[float, str, str]] = []
+    peak = spec.base_rps * (1.0 + spec.diurnal_amplitude)
+    t = 0.0
+    while True:
+        t += rng.exponential(1.0 / peak)
+        if t >= spec.duration_s:
+            break
+        rate = spec.base_rps * (
+            1.0 + spec.diurnal_amplitude * math.sin(2 * math.pi * t / period)
+        )
+        if rng.random() < rate / peak:  # thinning
+            fname = spec.functions[rng.choice(len(spec.functions), p=pop)]
+            qos = qos_names[rng.choice(len(qos_names), p=qos_w)]
+            events.append((t, qos, fname))
+    # flash crowds: LATENCY bursts on tail functions — the hardest case
+    # (an unpopular function is cold everywhere when the crowd arrives)
+    for b in range(spec.flash_crowds):
+        t0 = spec.duration_s * (b + 1) / (spec.flash_crowds + 1)
+        target = spec.functions[-(1 + b % len(spec.functions))]
+        for _ in range(max(1, int(spec.flash_rps * spec.flash_duration_s))):
+            tt = t0 + rng.random() * spec.flash_duration_s
+            if tt < spec.duration_s:
+                events.append((tt, "latency", target))
+    events.sort(key=lambda e: e[0])
+    return events
+
+
 def timed(f, *args, repeats=3, **kw):
     best = float("inf")
     out = None

@@ -168,6 +168,62 @@ def prewarm_table(pw) -> str:
     return "\n".join(out)
 
 
+def scale_table(sc) -> str:
+    """Markdown for the ``"scale"`` key: per-regime latency / cost /
+    cold-start table, the drain-conversion comparison, and the acceptance
+    ratios (p99 vs static-over, node-seconds vs static-over, handoff
+    delta vs full re-restore)."""
+    tr = sc.get("trace", {})
+    fl = sc.get("fleet", {})
+    out = [
+        "#### Trace-replay scale harness "
+        f"({tr.get('functions', '?')} fns, {tr.get('arrivals', '?')} "
+        f"arrivals over {tr.get('duration_s', '?')} s, "
+        f"{tr.get('flash_crowds', '?')} flash crowd(s); static "
+        f"{fl.get('static_small', '?')}/{fl.get('static_over', '?')} nodes, "
+        f"autoscale {fl.get('autoscale_min', '?')}-"
+        f"{fl.get('autoscale_max', '?')})",
+        "",
+        "| regime | p50 ttft (ms) | p99 ttft (ms) | cold | joined | warm |"
+        " node-s | final nodes | drain colds | audit fail |",
+        "|---|---|---|---|---|---|---|---|---|---|",
+    ]
+    order = ("static_over", "static_small",
+             "autoscale_handoff", "autoscale_evict")
+    regimes = sc.get("regimes", {})
+    for rname in [r for r in order if r in regimes] + sorted(
+        set(regimes) - set(order)
+    ):
+        r = regimes[rname]
+
+        def ms(v):
+            return "—" if v is None else f"{v*1e3:.2f}"
+        dc = r.get("drain_converted_colds")
+        out.append(
+            f"| {rname} | {ms(r.get('latency_ttft_p50_s'))} | "
+            f"{ms(r.get('latency_ttft_p99_s'))} | {r['cold']} | "
+            f"{r['joined']} | {r['warm']} | {r['node_seconds']:.1f} | "
+            f"{r.get('final_nodes', '?')} | "
+            f"{'—' if dc is None else dc} | "
+            f"{r.get('audit_failures', '?')} |"
+        )
+    p99 = sc.get("p99_vs_static_over")
+    if p99 is not None:
+        out.append("")
+        out.append(
+            f"autoscale_handoff p99 / static_over = **{p99:.3f}x** (must be "
+            f"<=1.5) at **{sc.get('node_seconds_vs_static_over', 0):.3f}x** "
+            f"its node-seconds (must be <=0.7); handoff delta "
+            f"**{sc.get('handoff_mean_delta_bytes', 0)/1e3:.1f} KB**/instance "
+            f"vs **{sc.get('evict_mean_rerestore_bytes', 0)/1e6:.1f} MB** "
+            f"full re-restore (must be <=0.5x)"
+        )
+    if sc.get("error"):
+        out.append(f"**SCENARIO FAILED**: {sc['error']}")
+    out.append("")
+    return "\n".join(out)
+
+
 def coldstart_tables(d) -> str:
     """Markdown for BENCH_coldstart.json: per-mode TTFT, delta economics,
     memory-pressure high-water marks, and the cluster placement table."""
@@ -339,6 +395,9 @@ def coldstart_tables(d) -> str:
     pw = d.get("prewarm")
     if pw:
         out.append(prewarm_table(pw))
+    sc = d.get("scale")
+    if sc:
+        out.append(scale_table(sc))
     return "\n".join(out) if out else "_no BENCH_coldstart.json data_"
 
 
@@ -348,7 +407,7 @@ def main():
     ap.add_argument(
         "--section", default="all",
         choices=["dryrun", "roofline", "coldstart", "dedup", "prewarm",
-                 "both", "all"],
+                 "scale", "both", "all"],
     )
     args = ap.parse_args()
     cells = load(args.tag)
@@ -386,6 +445,16 @@ def main():
             print(prewarm_table(pw))
         else:
             print("_no prewarm data — run benchmarks.run --only prewarm first_")
+    if args.section == "scale":
+        print("### Scale-harness table\n")
+        sc = (
+            json.loads(COLDSTART.read_text()).get("scale")
+            if COLDSTART.exists() else None
+        )
+        if sc:
+            print(scale_table(sc))
+        else:
+            print("_no scale data — run benchmarks.run --only scale first_")
 
 
 if __name__ == "__main__":

@@ -45,6 +45,7 @@ MODULES = [
     "dedup",
     "qos",
     "prewarm",
+    "scale",
     "restore_bandwidth",
     "roofline",
 ]

@@ -1,0 +1,442 @@
+"""Trace-replay scale harness: SLO-driven elastic autoscaling with
+warm-state handoff vs static fleets.
+
+A seeded trace (zipf function popularity, diurnal rate swing, a LATENCY
+flash crowd aimed at an unpopular function — ``benchmarks.common
+.generate_trace``) replays open-loop against the same catalog four times:
+
+* ``static_over``        — an overprovisioned fleet sized for the flash
+                           crowd: the latency gold standard, paying
+                           node-seconds all day for its worst minute.
+* ``static_small``       — the autoscaler's floor as a static fleet: what
+                           "just run fewer nodes" costs at the tail.
+* ``autoscale_handoff``  — the full system: SLO-driven scale-out,
+                           drain + warm-state handoff on scale-in.
+* ``autoscale_evict``    — the ablation: identical control loop, but
+                           scale-in evicts warm state instead of handing
+                           it off.
+
+After replay, each autoscale regime force-drains its warmest node and
+re-requests exactly the functions that node held WARM: with handoff every
+probe is served warm (scale-in converted ZERO warm instances into cold
+starts); with drain-and-evict at least one pays a full cold restore.
+
+Asserted (the PR's acceptance bar): handoff drain-conversion == 0 and
+evict >= 1; mean handoff delta bytes <= 0.5x the mean bytes a full
+re-restore sources; the autoscaled fleet holds LATENCY p99 TTFT <= 1.5x
+static-overprovisioned while spending <= 0.7x its node-seconds; every
+node's ledger audit (including each drained node's, taken at drain time)
+is clean.  Merges into ``BENCH_coldstart.json`` under ``"scale"``.
+"""
+from __future__ import annotations
+
+import tempfile
+import time
+
+import numpy as np
+
+from benchmarks.common import PROMPT, TraceSpec, generate_trace, smoke
+
+BENCH_TARGET = "coldstart"
+SUMMARY_KEY = "scale"
+SUMMARY: dict = {}
+
+SIM_READ_BW = 1.5e8
+
+
+def _smoke() -> bool:
+    return smoke()
+
+
+def _params():
+    """Trace + fleet knobs, sized for CI smoke vs the full run."""
+    if _smoke():
+        return {
+            "n_functions": 5,
+            "duration_s": 6.0,
+            "base_rps": 6.0,
+            "flash_crowds": 1,
+            "flash_rps": 10.0,
+            "flash_duration_s": 1.2,
+            "static_over": 4,
+            "static_small": 1,
+            "as_min": 2,
+            "as_max": 3,
+            "tick_s": 0.15,
+            "slo_ttft_p99_s": 0.30,
+            "slo_queue_p95_s": 0.30,
+            "scale_out_after": 2,
+            "scale_in_after": 6,
+        }
+    return {
+        "n_functions": 8,
+        "duration_s": 18.0,
+        "base_rps": 8.0,
+        "flash_crowds": 2,
+        "flash_rps": 14.0,
+        "flash_duration_s": 2.0,
+        "static_over": 10,
+        "static_small": 2,
+        "as_min": 2,
+        "as_max": 6,
+        "tick_s": 0.2,
+        "slo_ttft_p99_s": 0.35,
+        "slo_queue_p95_s": 0.35,
+        "scale_out_after": 2,
+        "scale_in_after": 8,
+    }
+
+
+def _cfg():
+    import dataclasses
+
+    from repro.configs import get_config
+
+    cfg = get_config("qwen1.5-0.5b").reduced()
+    if not _smoke():
+        cfg = dataclasses.replace(
+            cfg, pattern_reps=6, n_layers=6, d_model=256, d_ff=512, head_dim=32
+        )
+    return cfg
+
+
+def _publish(catalog, cfg, dirpath, p):
+    import jax
+
+    from repro.models import lm
+
+    fnames = [f"fn-{i}" for i in range(p["n_functions"])]
+    extra = {"opt": np.ones((1 << 20,), np.float32)}  # 4 MB residual tail
+    for i, fname in enumerate(fnames):
+        params = lm.init_params(cfg, jax.random.PRNGKey(500 + i))
+        catalog.publish(fname, cfg, params, dirpath, warm_ttl_s=3600.0,
+                        formats=("jif",), extra_state=extra)
+    return fnames
+
+
+def _make_node_factory(catalog, store):
+    from repro.core import NodeChunkCache
+    from repro.serve.invocation import AdmissionController
+    from repro.serve.node import FixedTTLPolicy, NodeScheduler
+
+    def factory(name: str) -> NodeScheduler:
+        return NodeScheduler(
+            registry=catalog.registry,
+            name=name,
+            max_workers=12,
+            keepalive=FixedTTLPolicy(3600.0),
+            admission=AdmissionController(max_queue_depth=96,
+                                          max_batch_queued=16,
+                                          max_batch_inflight=4),
+            chunks=(NodeChunkCache(store, node=name)
+                    if store is not None else None),
+        )
+
+    return factory
+
+
+def _replay(router, trace, cfg, tracker=None):
+    """Open-loop replay: sleep to each arrival, submit, never wait."""
+    from repro.serve.invocation import (
+        DeadlineExceeded,
+        Invocation,
+        Overloaded,
+        QosClass,
+    )
+
+    handles = []  # (qos, fname, handle)
+    rejected = 0
+    t0 = time.perf_counter()
+    for t_arr, qos_name, fname in trace:
+        delay = t_arr - (time.perf_counter() - t0)
+        if delay > 0:
+            time.sleep(delay)
+        qos = QosClass(qos_name)
+        if tracker is not None:
+            tracker.record(fname)
+        inv = Invocation(function=fname, prompt=PROMPT, max_new_tokens=2,
+                         cfg=cfg, simulate_read_bw=SIM_READ_BW, qos=qos)
+        try:
+            handles.append((qos, fname, router.submit_invocation(inv)))
+        except (Overloaded, DeadlineExceeded):
+            rejected += 1
+    return handles, rejected, time.perf_counter() - t0
+
+
+_SOURCED_KEYS = (
+    # every tier a restore sources bytes from: image-store reads, in-memory
+    # base dedup, zero pool, and the three chunk-CAS tiers
+    "bytes_read", "base_bytes", "zero_bytes",
+    "chunk_resident_bytes", "chunk_cas_bytes", "chunk_peer_bytes",
+)
+
+
+def _forced_drain_probe(router, scaler, cfg) -> dict:
+    """Deterministic scale-in measurement: drain the node holding the most
+    warm instances, then re-request EXACTLY those functions.  Handoff must
+    serve every probe warm; drain-and-evict pays cold restores."""
+    victim = max(router.nodes, key=lambda n: len(n.warm_instances()))
+    warm_fns = sorted(i.spec.name for i in victim.warm_instances())
+    out = {
+        "drained_node": victim.name,
+        "drained_warm": warm_fns,
+        "converted_colds": 0,
+        "probe_sourced_bytes": 0,
+        "probe_cold_restores": 0,
+    }
+    if not warm_fns or len(router.nodes) < 2:
+        return out
+    scaler.drain_node(victim.name)  # audits the drained ledger (raises)
+    for fname in warm_fns:
+        r = router.invoke(fname, PROMPT, max_new_tokens=2, cfg=cfg,
+                          simulate_read_bw=SIM_READ_BW)
+        if r.cold and not r.joined:
+            out["converted_colds"] += 1
+        if r.stats:
+            out["probe_cold_restores"] += 1
+            out["probe_sourced_bytes"] += sum(
+                int(r.stats.get(k, 0)) for k in _SOURCED_KEYS
+            )
+    return out
+
+
+def _run_regime(regime, catalog, store, cfg, trace, p, dirpath) -> dict:
+    from repro.serve.autoscale import AutoScaler, SLOMonitor, ServiceSLO
+    from repro.serve.cluster import ClusterRouter, LocalityFirst
+    from repro.serve.invocation import QosClass
+    from repro.serve.prewarm import ArrivalTracker, PrewarmPolicy
+
+    factory = _make_node_factory(catalog, store)
+    n_init = {
+        "static_over": p["static_over"],
+        "static_small": p["static_small"],
+    }.get(regime, p["as_min"])
+    nodes = [factory(f"node{i}") for i in range(n_init)]
+    router = ClusterRouter(catalog, nodes, placement=LocalityFirst(),
+                           latency_spill_depth=3,
+                           interconnect_bw=4 * SIM_READ_BW)
+    autoscaled = regime.startswith("autoscale")
+    scaler = None
+    tracker = None
+    try:
+        if autoscaled:
+            tracker = ArrivalTracker()
+            scaler = AutoScaler(
+                router,
+                [ServiceSLO(qos=QosClass.LATENCY,
+                            ttft_p99_s=p["slo_ttft_p99_s"],
+                            queue_wait_p95_s=p["slo_queue_p95_s"])],
+                handoff_dir=f"{dirpath}/handoff-{regime}",
+                node_factory=factory,
+                monitor=SLOMonitor(window_s=2.0, min_samples=6),
+                keepalive=PrewarmPolicy(tracker),
+                min_nodes=p["as_min"],
+                max_nodes=p["as_max"],
+                scale_out_after=p["scale_out_after"],
+                scale_in_after=p["scale_in_after"],
+                handoff=(regime == "autoscale_handoff"),
+                drain_timeout_s=30.0,
+                simulate_read_bw=SIM_READ_BW,
+            )
+            ns0 = scaler.node_seconds()
+            scaler.start(p["tick_s"])  # control loop off the replay thread
+
+        handles, rejected, span_s = _replay(router, trace, cfg, tracker)
+        results = []
+        failed = 0
+        for qos, fname, h in handles:
+            try:
+                results.append((qos, fname, h.result(120)))
+            except Exception:
+                failed += 1
+        if scaler is not None:
+            scaler.stop()
+        node_seconds = (
+            (scaler.node_seconds() - ns0) if scaler is not None
+            else len(router.nodes) * span_s
+        )
+        router.drain_residual()
+
+        probe = None
+        if autoscaled:
+            probe = _forced_drain_probe(router, scaler, cfg)
+            router.drain_residual()
+
+        audit_failures = 0
+        for n in router.nodes:
+            try:
+                n.memory.audit()
+            except AssertionError:
+                audit_failures += 1
+        hw = {n.name: n.memory.high_water() for n in router.nodes}
+        demand_colds = sum(n.stats["cold_starts"] for n in router.nodes)
+    finally:
+        if scaler is not None:
+            scaler.stop()
+        router.close()
+
+    lat = [r.queue_wait_s + r.ttft_s for q, _, r in results
+           if q is QosClass.LATENCY]
+    per_class = {}
+    for qcls in QosClass:
+        vals = [r.queue_wait_s + r.ttft_s for q, _, r in results
+                if q is qcls]
+        if vals:
+            per_class[qcls.value] = {
+                "n": len(vals),
+                "ttft_p50_s": float(np.percentile(vals, 50)),
+                "ttft_p99_s": float(np.percentile(vals, 99)),
+            }
+    out = {
+        "submitted": len(handles) + rejected,
+        "rejected": rejected,
+        "failed": failed,
+        "cold": sum(1 for _, _, r in results if r.cold and not r.joined),
+        "joined": sum(1 for _, _, r in results if r.joined),
+        "warm": sum(1 for _, _, r in results if not r.cold),
+        "span_s": span_s,
+        "node_seconds": float(node_seconds),
+        "final_nodes": len(hw),
+        "latency_ttft_p50_s": float(np.percentile(lat, 50)) if lat else None,
+        "latency_ttft_p99_s": float(np.percentile(lat, 99)) if lat else None,
+        "per_class": per_class,
+        "node_cold_starts_total": demand_colds,
+        "audit_failures": audit_failures,
+        "hw_max_node_bytes": max(
+            (h.get("total", 0) for h in hw.values()), default=0
+        ),
+    }
+    if scaler is not None:
+        out["autoscaler"] = dict(scaler.stats)
+        out["events"] = [
+            {"action": e["action"], "node": e["node"], "detail": e["detail"]}
+            for e in scaler.events
+        ]
+        out["drain_probe"] = probe
+        out["drain_converted_colds"] = probe["converted_colds"]
+        out["handoffs_ok"] = scaler.stats["handoffs_ok"]
+        out["handoff_delta_bytes"] = scaler.stats["handoff_delta_bytes"]
+    return out
+
+
+def run() -> list:
+    from repro.core import ChunkStore
+    from repro.serve.cluster import FunctionCatalog
+    from repro.serve.node import NodeScheduler
+
+    cfg = _cfg()
+    p = _params()
+    rows: list = []
+    SUMMARY.clear()
+
+    with tempfile.TemporaryDirectory() as d:
+        store = ChunkStore(f"{d}/cas")
+        catalog = FunctionCatalog(chunk_store=store)
+        fnames = _publish(catalog, cfg, d, p)
+        # compile-cache warmup on a throwaway node (shared jit cache)
+        warm_node = NodeScheduler(registry=catalog.registry)
+        warm_node.invoke(fnames[0], PROMPT, max_new_tokens=2,
+                         mode="spice_sync", cfg=cfg)
+
+        trace = generate_trace(TraceSpec(
+            functions=tuple(fnames),
+            duration_s=p["duration_s"],
+            base_rps=p["base_rps"],
+            flash_crowds=p["flash_crowds"],
+            flash_rps=p["flash_rps"],
+            flash_duration_s=p["flash_duration_s"],
+            seed=42,
+        ))
+
+        regimes = {}
+        for regime in ("static_over", "static_small",
+                       "autoscale_handoff", "autoscale_evict"):
+            regimes[regime] = _run_regime(
+                regime, catalog, store, cfg, trace, p, d
+            )
+
+    over = regimes["static_over"]
+    hand = regimes["autoscale_handoff"]
+    evic = regimes["autoscale_evict"]
+    p99_ratio = (
+        hand["latency_ttft_p99_s"] / max(over["latency_ttft_p99_s"], 1e-12)
+    )
+    ns_ratio = hand["node_seconds"] / max(over["node_seconds"], 1e-9)
+    audit_failures = sum(r["audit_failures"] for r in regimes.values())
+    handoffs = max(hand["handoffs_ok"], 1)
+    mean_delta = hand["handoff_delta_bytes"] / handoffs
+    rr_colds = max(evic["drain_probe"]["probe_cold_restores"], 1)
+    mean_rerestore = evic["drain_probe"]["probe_sourced_bytes"] / rr_colds
+
+    SUMMARY.update({
+        "trace": {
+            "functions": len(fnames),
+            "arrivals": len(trace),
+            "duration_s": p["duration_s"],
+            "base_rps": p["base_rps"],
+            "flash_crowds": p["flash_crowds"],
+            "seed": 42,
+        },
+        "fleet": {
+            "static_over": p["static_over"],
+            "static_small": p["static_small"],
+            "autoscale_min": p["as_min"],
+            "autoscale_max": p["as_max"],
+        },
+        "slo": {
+            "latency_ttft_p99_s": p["slo_ttft_p99_s"],
+            "latency_queue_wait_p95_s": p["slo_queue_p95_s"],
+        },
+        "sim_read_bw": SIM_READ_BW,
+        "regimes": regimes,
+        "p99_vs_static_over": p99_ratio,
+        "node_seconds_vs_static_over": ns_ratio,
+        "handoff_mean_delta_bytes": mean_delta,
+        "evict_mean_rerestore_bytes": mean_rerestore,
+        "audit_failures": audit_failures,
+    })
+    for name, r in regimes.items():
+        rows.append((f"scale/{name}_latency_p99",
+                     (r["latency_ttft_p99_s"] or 0) * 1e6, ""))
+        rows.append((f"scale/{name}_node_seconds",
+                     r["node_seconds"] * 1e6, "node-seconds (us)"))
+        rows.append((f"scale/{name}_cold", float(r["cold"]), "cold starts"))
+    rows.append(("scale/handoff_drain_converted_colds",
+                 float(hand["drain_converted_colds"]), "must be 0"))
+    rows.append(("scale/evict_drain_converted_colds",
+                 float(evic["drain_converted_colds"]), "must be >=1"))
+    rows.append(("scale/p99_vs_static_over", p99_ratio, "x (must be <=1.5)"))
+    rows.append(("scale/node_seconds_vs_static_over", ns_ratio,
+                 "x (must be <=0.7)"))
+    rows.append(("scale/handoff_mean_delta_bytes", mean_delta, "bytes"))
+
+    # ---- the PR's acceptance bar, enforced where the numbers are made ----
+    assert audit_failures == 0, "ledger audit failed under the scale trace"
+    assert hand["handoffs_ok"] >= 1, (
+        "autoscale_handoff never handed off a warm instance"
+    )
+    assert hand["drain_converted_colds"] == 0, (
+        f"handoff scale-in converted "
+        f"{hand['drain_converted_colds']} warm instances to cold starts "
+        f"(drained {hand['drain_probe']['drained_warm']})"
+    )
+    assert evic["drain_converted_colds"] >= 1, (
+        "drain-and-evict converted no warm instance to a cold start — the "
+        "ablation shows no cost, so the handoff comparison is vacuous"
+    )
+    assert mean_rerestore > 0, "evict probe sourced zero restore bytes"
+    assert mean_delta <= 0.5 * mean_rerestore, (
+        f"handoff delta {mean_delta/1e3:.1f} KB/instance must be <= 0.5x a "
+        f"full re-restore's {mean_rerestore/1e6:.1f} MB"
+    )
+    assert p99_ratio <= 1.5, (
+        f"autoscaled LATENCY p99 {hand['latency_ttft_p99_s']:.4f}s must be "
+        f"<= 1.5x static-overprovisioned "
+        f"{over['latency_ttft_p99_s']:.4f}s (got {p99_ratio:.2f}x)"
+    )
+    assert ns_ratio <= 0.7, (
+        f"autoscaled node-seconds {hand['node_seconds']:.1f} must be <= "
+        f"0.7x static-overprovisioned {over['node_seconds']:.1f} "
+        f"(got {ns_ratio:.2f}x)"
+    )
+    return rows

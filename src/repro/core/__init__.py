@@ -12,7 +12,7 @@ from repro.core.overlay import (
     IntervalTable,
 )
 from repro.core.iosched import IOStream, PrefetchIOScheduler
-from repro.core.lifecycle import SnapshotPipeline
+from repro.core.lifecycle import SnapshotPipeline, delta_snapshot
 from repro.core.memory import (
     KIND_CHUNK_CAS,
     KIND_DEVICE_IMAGE,
@@ -34,6 +34,7 @@ from repro.core.upload import DeviceImageCache, DevicePath, UploadStream
 
 __all__ = [
     "SnapshotPipeline",
+    "delta_snapshot",
     "BaseImage",
     "NodeImageCache",
     "ChunkStore",

@@ -147,6 +147,37 @@ def parent_cache_key(path: str) -> str:
     return f"jif:{os.path.abspath(path)}#{st.st_mtime_ns:x}.{st.st_size:x}"
 
 
+def delta_snapshot(
+    state,
+    path: str,
+    parent: str,
+    *,
+    meta: Optional[Dict[str, Any]] = None,
+    node_cache=None,
+    memory=None,
+) -> SnapshotStats:
+    """Snapshot ``state`` as a delta against ``parent`` (a JIF on disk),
+    inheriting the parent's access order and working-set boundary.
+
+    This is the warm-state handoff writer: a live WARM instance's tree is
+    classified against the function's own published image, so only dirty
+    pages land in the data segment (typically KBs), while the child keeps
+    the parent's restore layout — the successor node promotes at the same
+    ws boundary the original restore would have.  ``stats.private_bytes``
+    is the delta's wire cost; everything else restores through the parent
+    chain (node caches / chunk CAS / peer fetch)."""
+    from repro.core.jif import JifReader
+
+    with JifReader(parent) as r:
+        order = r.meta.get("access_order")
+        ws = r.meta.get("working_set")
+    pipeline = SnapshotPipeline(node_cache=node_cache, memory=memory)
+    return pipeline.run(
+        state, path, parent=parent,
+        access_order=order, working_set=ws, meta=meta,
+    )
+
+
 class SnapshotPipeline:
     """Staged snapshot writer (trim → classify → relocate → write)."""
 

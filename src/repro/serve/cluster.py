@@ -123,9 +123,11 @@ class FunctionCatalog:
         # fname -> published manifest (one store ref per chunk occurrence;
         # a republish/relayout returns the OLD manifest's refs)
         self._chunk_manifests: Dict[str, List[bytes]] = {}
+        self._handoff_seq = 0  # unique handoff image names (per catalog)
         self.stats = {
             "publishes": 0,
             "relayouts": 0,
+            "handoffs": 0,
             "chunks_published": 0,
             "chunk_bytes_unique": 0,
             "chunk_bytes_deduped": 0,
@@ -355,6 +357,70 @@ class FunctionCatalog:
         self._bump("relayouts")
         return stats
 
+    # ------------------------------------------------- warm-state handoff
+    def publish_handoff(
+        self,
+        fname: str,
+        state: Dict[str, np.ndarray],
+        dirpath: str,
+        memory: Optional[NodeMemoryManager] = None,
+    ) -> Tuple[str, SnapshotStats]:
+        """Snapshot a node's LIVE warm state as a delta against the
+        function's own published image (``repro.core.delta_snapshot``) and
+        ingest it into the chunk CAS under a handoff-scoped manifest key.
+
+        Because warm generation is read-only over the restored tree, the
+        delta's private payload is the dirty warm state only — typically
+        KBs against a multi-MB image — and every base chunk the successor
+        node needs is already CAS-resident / peer-fetchable from the
+        original publish.  Returns ``(handoff_jif_path, stats)``;
+        ``stats.private_bytes`` is the handoff's wire cost.  ``memory``
+        charges the snapshot writer's state copy as scratch against the
+        source node so draining competes with live tenants honestly.
+
+        The registry is never touched: the successor restores the handoff
+        image via ``Invocation(jif_override=...)``, and
+        :meth:`retire_handoff` drops the manifest (and the file) once the
+        successor is WARM."""
+        from repro.core import delta_snapshot
+
+        spec = self.registry.get(fname)
+        os.makedirs(dirpath, exist_ok=True)
+        with self._lock:
+            self._handoff_seq += 1
+            seq = self._handoff_seq
+        path = os.path.join(dirpath, f"{fname}.handoff{seq}.jif")
+        stats = delta_snapshot(
+            state,
+            path,
+            parent=spec.jif_path,
+            meta={"arch": spec.arch, "function": fname, "handoff": True},
+            node_cache=self.base_images,
+            memory=memory,
+        )
+        self._ingest_chunks(self._handoff_key(fname, path), path)
+        self._bump("handoffs")
+        return path, stats
+
+    @staticmethod
+    def _handoff_key(fname: str, path: str) -> str:
+        # manifest key disjoint from the function's own publish key, so a
+        # handoff never swaps (and releases) the published image's manifest
+        return f"{fname}#handoff:{path}"
+
+    def retire_handoff(self, fname: str, path: str, unlink: bool = True) -> None:
+        """Release a handoff image's CAS refs (chunks no other image or
+        node references are unlinked) and optionally delete the file."""
+        with self._lock:
+            manifest = self._chunk_manifests.pop(self._handoff_key(fname, path), None)
+        if manifest and self.chunk_store is not None:
+            self.chunk_store.release_many(manifest)
+        if unlink:
+            try:
+                os.unlink(path)
+            except OSError:
+                pass
+
     # ---------------------------------------------------------- persistence
     def save(self, path: str) -> None:
         """Persist the registry (the catalog's durable state — recorded
@@ -501,12 +567,27 @@ class ClusterRouter:
         urgent_deadline_s: float = 1.0,
         interconnect_bw: Optional[float] = None,
         prewarm=None,
+        load_cache_ttl_s: float = 0.005,
     ):
         """``latency_spill_depth``: an urgent invocation (LATENCY class, or
         a deadline within ``urgent_deadline_s``) whose sticky replica has
         this many invocations in flight steals a replica on the node
         ``place_urgent`` picks instead of queueing — BATCH work waits where
         LATENCY work scales out.
+
+        ``scale_out_queue_depth`` is DEPRECATED as a scaling mechanism: it
+        is a static per-function replica-growth threshold, kept as an alias
+        for existing callers.  New deployments should drive replica and
+        node count through :class:`repro.serve.autoscale.AutoScaler`, which
+        reacts to declared SLOs instead of a fixed queue depth.
+
+        ``load_cache_ttl_s`` bounds the cost of placement probes at fleet
+        scale: the router sets it as every node's ``load_ttl_s``, so a
+        placement decision over 50 nodes reads 50 cached snapshots instead
+        of taking 50 × several locks per request.  Staleness is bounded by
+        the TTL *and* by instance lifecycle edges (any state transition
+        invalidates that node's cached probe immediately); 0 disables
+        caching.
 
         ``interconnect_bw`` (bytes/s) paces peer chunk transfers between
         nodes with chunk caches, modeling the node-to-node fabric the same
@@ -541,23 +622,32 @@ class ClusterRouter:
         self.latency_spill_depth = latency_spill_depth
         self.urgent_deadline_s = urgent_deadline_s
         self.interconnect_bw = interconnect_bw
+        self.load_cache_ttl_s = load_cache_ttl_s
         self._lock = threading.Lock()
         self._closed = False
-        self._assign: Dict[str, List[int]] = {}  # sticky fname -> node idxs
+        self._assign: Dict[str, List[str]] = {}  # sticky fname -> node names
+        self._draining: set = set()  # node names excluded from placement
+        # name -> live chunk cache (peer-fetch closures read this at call
+        # time, so nodes added later serve peers immediately)
+        self._chunk_caches: Dict[str, Any] = {}
         self.stats = {
             "routed": 0,
             "scale_outs": 0,
             "latency_steals": 0,
             "peer_fetches": 0,
             "peer_fetch_bytes": 0,
+            "nodes_added": 0,
+            "nodes_removed": 0,
         }
-        self._wire_chunk_peers()
+        for node in self.nodes:
+            node.load_ttl_s = load_cache_ttl_s
+            self._wire_node_chunks(node)
         self.prewarm = prewarm
         if prewarm is not None:
             prewarm.attach(self)
 
-    def _wire_chunk_peers(self) -> None:
-        """Connect every node's chunk cache to the cluster: residency
+    def _wire_node_chunks(self, node: NodeScheduler) -> None:
+        """Connect one node's chunk cache to the cluster: residency
         announcements feed the catalog's digest→holders index, and the
         peer-fetch hook pulls a missing chunk from whichever peer holds it
         (paced by ``interconnect_bw``) instead of re-reading the image
@@ -565,43 +655,113 @@ class ClusterRouter:
         CAS file — so a transfer never perturbs the holder's LRU."""
         import time as _time
 
-        caches = {
-            n.name: n.chunks for n in self.nodes if n.chunks is not None
-        }
-        if not caches:
+        if node.chunks is None:
             return
+        cache = node.chunks
+        self_name = node.name
+        self._chunk_caches[self_name] = cache
 
-        def make_fetch(self_name: str):
-            def fetch(digest: bytes) -> Optional[bytes]:
-                for holder in self.catalog.chunk_holders(digest):
-                    if holder == self_name:
-                        continue
-                    cache = caches.get(holder)
-                    if cache is None:
-                        continue
-                    data = cache.peek(digest)
-                    if data is None:
-                        continue  # stale index entry: try the next holder
-                    if self.interconnect_bw:
-                        _time.sleep(len(data) / self.interconnect_bw)
-                    with self._lock:
-                        self.stats["peer_fetches"] += 1
-                        self.stats["peer_fetch_bytes"] += len(data)
-                    return data
-                return None
+        def fetch(digest: bytes) -> Optional[bytes]:
+            for holder in self.catalog.chunk_holders(digest):
+                if holder == self_name:
+                    continue
+                peer = self._chunk_caches.get(holder)
+                if peer is None:
+                    continue
+                data = peer.peek(digest)
+                if data is None:
+                    continue  # stale index entry: try the next holder
+                if self.interconnect_bw:
+                    _time.sleep(len(data) / self.interconnect_bw)
+                with self._lock:
+                    self.stats["peer_fetches"] += 1
+                    self.stats["peer_fetch_bytes"] += len(data)
+                return data
+            return None
 
-            return fetch
+        cache.node = self_name  # announce under the router-assigned name
+        cache.announce = self.catalog.announce_chunk
+        cache.peer_fetch = fetch
 
-        for name, cache in caches.items():
-            cache.node = name  # announce under the router-assigned name
-            cache.announce = self.catalog.announce_chunk
-            cache.peer_fetch = make_fetch(name)
+    # ------------------------------------------------------- fleet elasticity
+    def add_node(self, node: NodeScheduler) -> NodeScheduler:
+        """Join a node to the fleet: adopt the registry, assign a unique
+        name if unnamed, apply the fleet's load-probe TTL, and wire its
+        chunk cache into the peer-fetch mesh.  Placement sees it on the
+        next request."""
+        with self._lock:
+            if self._closed:
+                raise Overloaded("router is closed")
+            node.registry = self.catalog.registry
+            taken = {n.name for n in self.nodes}
+            if not node.name:
+                name = f"node{len(self.nodes)}"
+                while name in taken:
+                    name = f"{name}x"
+                node.name = name
+            if node.name in taken:
+                raise ValueError(f"node name {node.name!r} already in fleet")
+            node.load_ttl_s = self.load_cache_ttl_s
+            self.nodes = self.nodes + [node]  # readers snapshot; never mutate
+            self.stats["nodes_added"] += 1
+        self._wire_node_chunks(node)
+        return node
+
+    def remove_node(self, name: str) -> NodeScheduler:
+        """Detach a node from the fleet: placement stops immediately, the
+        node's sticky assignments are dropped (a later request re-places
+        the function), and its chunk cache leaves the peer mesh.  The
+        caller still owns the node object — drain it first
+        (:meth:`set_draining` + ``quiesce``) and ``close()`` it after; the
+        close announces its chunks absent, cleaning the holders index."""
+        with self._lock:
+            node = next((n for n in self.nodes if n.name == name), None)
+            if node is None:
+                raise KeyError(name)
+            if len(self.nodes) == 1:
+                raise ValueError("cannot remove the last node")
+            self.nodes = [n for n in self.nodes if n.name != name]
+            for fname in list(self._assign):
+                reps = [nm for nm in self._assign[fname] if nm != name]
+                if reps:
+                    self._assign[fname] = reps
+                else:
+                    del self._assign[fname]
+            self._draining.discard(name)
+            self._chunk_caches.pop(name, None)
+            self.stats["nodes_removed"] += 1
+        return node
+
+    def set_draining(self, name: str, draining: bool = True) -> None:
+        """Mark a node as draining: placement skips it (including sticky
+        replicas already pinned there), but queued and in-flight work on it
+        completes normally.  Reversible until :meth:`remove_node`."""
+        self.node(name)  # raise KeyError for unknown names
+        with self._lock:
+            if draining:
+                self._draining.add(name)
+            else:
+                self._draining.discard(name)
+
+    def draining(self) -> Tuple[str, ...]:
+        with self._lock:
+            return tuple(self._draining)
+
+    def active_nodes(self) -> List[NodeScheduler]:
+        """Placement candidates: the fleet minus draining nodes (falling
+        back to the whole fleet if everything is draining, so routing can
+        never dead-end)."""
+        with self._lock:
+            nodes = self.nodes
+            draining = set(self._draining)
+        active = [n for n in nodes if n.name not in draining]
+        return active or list(nodes)
 
     # ------------------------------------------------------------- routing
-    def _probe(self) -> List[NodeLoad]:
+    def _probe(self, nodes: Sequence[NodeScheduler]) -> List[NodeLoad]:
         if self.placement.needs_loads:
-            return [n.load() for n in self.nodes]
-        return [_EMPTY_LOAD] * len(self.nodes)
+            return [n.load() for n in nodes]
+        return [_EMPTY_LOAD] * len(nodes)
 
     def _urgent(self, inv: Optional[Invocation]) -> bool:
         """LATENCY class, or a deadline tighter than ``urgent_deadline_s``:
@@ -613,77 +773,85 @@ class ClusterRouter:
         remaining = inv.remaining_s()
         return remaining is not None and remaining < self.urgent_deadline_s
 
-    def _pick(self, fname: str, inv: Optional[Invocation] = None) -> int:
+    def _pick(self, fname: str, inv: Optional[Invocation] = None) -> NodeScheduler:
         """Load probes run OUTSIDE the router lock (each takes several node
-        locks; serializing all routing through them would bottleneck the
-        burst regime).  The lock only guards the sticky replica map —
-        probes may be a beat stale, which placement tolerates (it ranks)."""
+        locks — though the fleet-wide ``load_ttl_s`` cache amortizes that
+        to O(1) per node between lifecycle edges).  The lock only guards
+        the sticky replica map and draining set — probes may be a beat
+        stale, which placement tolerates (it ranks)."""
         spec = self.catalog.registry.get(fname)
         key = self.catalog.locality_key(fname)
         urgent = self._urgent(inv)
         with self._lock:
             self.stats["routed"] += 1
+            draining = set(self._draining)
             assigned = (
                 list(self._assign.get(fname, ())) if self.placement.sticky
                 else None
             )
+        cands = self.active_nodes()
         if assigned is None:  # non-sticky: place every request independently
             place = self.placement.place_urgent if urgent else self.placement.place
-            return place(spec, key, self._probe())
-        if not assigned:
-            idx = self.placement.place(spec, key, self._probe())
+            return cands[place(spec, key, self._probe(cands))]
+        by_name = {n.name: n for n in self.nodes}
+        # draining replicas stop taking NEW placements; a removed node's
+        # entries are pruned by remove_node but tolerate the race here
+        live = [nm for nm in assigned if nm in by_name and nm not in draining]
+        if not live:
+            chosen = cands[self.placement.place(spec, key, self._probe(cands))]
             with self._lock:
-                won = self._assign.setdefault(fname, [idx])
-                if won == [idx]:
-                    return idx
-                assigned = list(won)  # lost the placement race: join the winner
+                won = self._assign.setdefault(fname, [chosen.name])
+                if won == [chosen.name]:
+                    return chosen
+                # lost the placement race: join the winner's replicas
+                live = [nm for nm in won if nm in by_name] or [chosen.name]
         # sticky: route among this function's replicas (joins ride the
         # in-flight restore; warm hits stay warm)
-        loads = {i: self.nodes[i].load() for i in assigned}
-        idx = min(
-            assigned,
-            key=lambda i: (loads[i].queue_depth, loads[i].pressure),
+        loads = {nm: by_name[nm].load() for nm in live}
+        best = min(
+            live,
+            key=lambda nm: (loads[nm].queue_depth, loads[nm].pressure),
         )
-        if urgent and len(assigned) < len(self.nodes) \
-                and loads[idx].urgent_depth >= self.latency_spill_depth:
+        room = len(live) < len(cands)
+        if urgent and room \
+                and loads[best].urgent_depth >= self.latency_spill_depth:
             # deadline-aware steal: the least-loaded replica is backed up
             # with work the QoS queue cannot dispatch past (urgent_depth
             # discounts parked BATCH occupancy) and this invocation cannot
             # wait — grow a replica where place_urgent points (a BATCH
             # invocation queues instead)
             return self._grow_replica(
-                fname, spec, key, assigned, idx, urgent=True
+                fname, spec, key, live, by_name[best], urgent=True
             )
         if (
             self.scale_out_queue_depth is not None
             and (inv is None or inv.qos is not QosClass.BATCH)
-            and len(assigned) < len(self.nodes)
-            and loads[idx].queue_depth >= self.scale_out_queue_depth
+            and room
+            and loads[best].queue_depth >= self.scale_out_queue_depth
         ):
             # opt-in scale-out: the least-loaded replica is still backed
             # up — place one more replica by the same policy.  BATCH-class
             # invocations never trigger it: background work waits.
             return self._grow_replica(
-                fname, spec, key, assigned, idx, urgent=False
+                fname, spec, key, live, by_name[best], urgent=False
             )
-        return idx
+        return by_name[best]
 
-    def _grow_replica(self, fname, spec, key, assigned, idx, urgent) -> int:
-        rest = [i for i in range(len(self.nodes)) if i not in assigned]
-        rest_loads = (
-            [self.nodes[i].load() for i in rest]
-            if self.placement.needs_loads
-            else [_EMPTY_LOAD] * len(rest)
-        )
+    def _grow_replica(
+        self, fname, spec, key, live, best: NodeScheduler, urgent
+    ) -> NodeScheduler:
+        rest = [n for n in self.active_nodes() if n.name not in live]
+        if not rest:
+            return best
         place = self.placement.place_urgent if urgent else self.placement.place
-        new = rest[place(spec, key, rest_loads)]
+        new = rest[place(spec, key, self._probe(rest))]
         with self._lock:
-            current = self._assign.setdefault(fname, [idx])
-            if new not in current and len(current) < len(self.nodes):
-                current.append(new)
+            current = self._assign.setdefault(fname, [best.name])
+            if new.name not in current:
+                current.append(new.name)
                 self.stats["latency_steals" if urgent else "scale_outs"] += 1
-                idx = new
-        return idx
+                return new
+        return best
 
     def submit_invocation(self, inv: Invocation) -> InvocationHandle:
         """Typed front door: place by QoS/deadline, admit on the chosen
@@ -695,8 +863,7 @@ class ClusterRouter:
             # submit time); the engine's own speculations never count as
             # demand, or prediction would feed back on itself
             self.prewarm.on_arrival(inv.function)
-        idx = self._pick(inv.function, inv)
-        return self.nodes[idx].submit_invocation(inv)
+        return self._pick(inv.function, inv).submit_invocation(inv)
 
     def submit(
         self,
@@ -729,7 +896,22 @@ class ClusterRouter:
     def replicas(self, fname: str) -> List[str]:
         """Node names a sticky function is currently placed on."""
         with self._lock:
-            return [self.nodes[i].name for i in self._assign.get(fname, [])]
+            return list(self._assign.get(fname, []))
+
+    def reassign(
+        self, fname: str, to_name: str, from_name: Optional[str] = None
+    ) -> None:
+        """Rewrite the sticky replica map after a warm-state handoff:
+        ``to_name`` joins ``fname``'s replicas, ``from_name`` (the drained
+        source) leaves them.  No-op coverage for non-sticky policies (they
+        never read the map)."""
+        self.node(to_name)  # raise KeyError for unknown names
+        with self._lock:
+            reps = self._assign.setdefault(fname, [])
+            if from_name is not None:
+                reps[:] = [nm for nm in reps if nm != from_name]
+            if to_name not in reps:
+                reps.append(to_name)
 
     # ------------------------------------------------------ fleet operations
     def evict(self, fname: Optional[str] = None) -> None:

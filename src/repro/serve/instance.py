@@ -217,6 +217,11 @@ class FunctionInstance:
         self.cfg = cfg
         self.state = InstanceState.COLD
         self.generation = 0
+        # state-change hook (set by the owning NodeScheduler): fired by
+        # _notify_transition() after every lifecycle edge, while ``cond`` is
+        # still held — it must be non-blocking (the node uses it to bump a
+        # load-epoch counter so cached NodeLoad snapshots invalidate)
+        self.on_transition: Optional[Callable[["FunctionInstance"], None]] = None
         self.cond = threading.Condition()
         self.tree: Optional[Any] = None          # handles while RESTORING,
         self.getter: Optional[Callable] = None   # resolved arrays once WARM
@@ -290,6 +295,13 @@ class FunctionInstance:
 
     # -------------------------------------------------------- transitions
     # All transition helpers assume ``self.cond`` is held by the caller.
+    def _notify_transition(self) -> None:
+        if self.on_transition is not None:
+            try:
+                self.on_transition(self)
+            except Exception:
+                pass  # an observer must never break a lifecycle edge
+
     def _clear(self, next_state: "InstanceState") -> None:
         """Drop all resident state and move to ``next_state`` (the single
         reset point: every field added to the instance clears here)."""
@@ -305,6 +317,7 @@ class FunctionInstance:
                 region.release()
         self.ws_region = None
         self.residual_region = None
+        self._notify_transition()
         self.cond.notify_all()
 
     def adopt_regions(self, ws_region, residual_region) -> None:
@@ -325,6 +338,7 @@ class FunctionInstance:
         self.getter = None
         self.ws_ready = False
         self.counters["cold_starts"] += 1
+        self._notify_transition()
         return self.generation
 
     def publish_restore(self, tree, getter, stats, regions=(None, None)) -> None:
@@ -348,6 +362,7 @@ class FunctionInstance:
         self.warm_expiry = now + ttl_s
         self.memory_bytes = est_bytes
         self.last_used = now
+        self._notify_transition()
         self.cond.notify_all()
 
     def finalize_warm(self, resolved_tree, now: float) -> None:
@@ -359,6 +374,7 @@ class FunctionInstance:
         self.tree = resolved_tree
         self.getter = None
         self.memory_bytes = _tree_bytes(resolved_tree)
+        self._notify_transition()
         self.cond.notify_all()
 
     def promote_warm(self, resolved_tree, ttl_s: float, now: float) -> None:
@@ -374,6 +390,7 @@ class FunctionInstance:
             # no keep-alive: drop straight back to COLD, free the state
             self._clear(InstanceState.COLD)
         self.last_used = now
+        self._notify_transition()
         self.cond.notify_all()
 
     def evict(self, reason: str = "manual") -> bool:
@@ -432,6 +449,7 @@ class FunctionInstance:
             else sum(getattr(a, "nbytes", 0) for a in keep.values())
         )
         self.counters["residual_evictions"] += 1
+        self._notify_transition()
         self.cond.notify_all()
         return freed
 

@@ -141,6 +141,11 @@ class Invocation:
     # generation; a no-op when the function is already warm/restoring.
     # Never fed back into the arrival tracker.
     prewarm: bool = False
+    # warm-state handoff (repro.serve.handoff): restore this JIF — a delta
+    # of live warm state against the function's own base — instead of the
+    # registered image.  Per-invocation: the registry is never touched, so
+    # any later restore of the function reads the published image.
+    jif_override: Optional[str] = None
 
     def remaining_s(self, now: Optional[float] = None) -> Optional[float]:
         if self.deadline_s is None:

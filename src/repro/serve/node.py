@@ -223,6 +223,7 @@ class NodeScheduler:
         upload_depth: int = 2,
         simulate_upload_bw: Optional[float] = None,
         chunks: Optional[NodeChunkCache] = None,
+        load_ttl_s: float = 0.0,
     ):
         """``install`` selects the device-install policy for restores on
         this node — "eager" (per-tensor device copy on the prefetcher
@@ -236,7 +237,11 @@ class NodeScheduler:
         ``chunks`` (a :class:`repro.core.chunkstore.NodeChunkCache` over
         the cluster's shared CAS) enables content-addressed dedup on every
         spice restore this node runs; its RAM tier attaches to the ledger
-        as rung 2."""
+        as rung 2.  ``load_ttl_s`` > 0 caches the :meth:`load` probe for
+        that long (staleness-bounded: any instance lifecycle transition
+        invalidates it immediately via the load epoch) so cluster placement
+        stays O(1)-amortized per node instead of taking several node locks
+        on every submission; the router sets it fleet-wide."""
         self.name = name
         self.registry = registry or FunctionRegistry()
         self.node_cache = node_cache or NodeImageCache()
@@ -313,6 +318,17 @@ class NodeScheduler:
         self._closed = False
         self._reaper_stop: Optional[threading.Event] = None
         self.reap_interval_s = reap_interval_s
+        # cached NodeLoad probe: (monotonic ts, epoch at build, NodeLoad).
+        # The epoch bumps on every instance lifecycle transition, so a
+        # cached snapshot can never claim a function warm/restoring that
+        # is not — queue-depth staleness is bounded by load_ttl_s.
+        self.load_ttl_s = load_ttl_s
+        self._load_epoch = 0
+        self._load_cache: Optional[Tuple[float, int, NodeLoad]] = None
+        # completion observer (autoscaler SLO feed): called with every
+        # successful InvokeResult right after the handle resolves; must be
+        # fast and non-raising (runs on the worker thread)
+        self.on_result = None
         self.stats = {
             "invocations": 0,
             "warm_hits": 0,
@@ -525,6 +541,11 @@ class NodeScheduler:
             result.running_ts = handle.event_ts(EVT_RUNNING) or 0.0
             result.timeline = handle.events()
             handle._finish_ok(result)
+            if self.on_result is not None:
+                try:
+                    self.on_result(result)
+                except Exception:
+                    pass  # an observer must never fail the invocation path
         except BaseException as exc:  # noqa: BLE001 — typed via the handle
             handle._finish_failed(exc)
         finally:
@@ -639,8 +660,35 @@ class NodeScheduler:
             self._reaper_stop = None
 
     # -------------------------------------------------------------- probes
+    def _bump_load_epoch(self, _inst=None) -> None:
+        """Invalidate the cached load probe (instance lifecycle hook; may
+        run under an instance's cond, so it must never take a lock)."""
+        self._load_epoch += 1
+
     def load(self) -> NodeLoad:
-        """The placement probe surface (see :class:`NodeLoad`)."""
+        """The placement probe surface (see :class:`NodeLoad`).  With
+        ``load_ttl_s`` set, a recent snapshot is served as long as no
+        instance transitioned since it was built (the load epoch is the
+        staleness bound on the warm/restoring sets; counters like
+        queue_depth tolerate the sub-TTL skew — placement only ranks)."""
+        ttl = self.load_ttl_s
+        if ttl > 0:
+            cached = self._load_cache
+            if (
+                cached is not None
+                and cached[1] == self._load_epoch
+                and time.monotonic() - cached[0] < ttl
+            ):
+                return cached[2]
+        # capture the epoch BEFORE building: a transition racing the build
+        # leaves a stale epoch behind, so the next probe rebuilds
+        epoch = self._load_epoch
+        fresh = self._load_uncached()
+        if ttl > 0:
+            self._load_cache = (time.monotonic(), epoch, fresh)
+        return fresh
+
+    def _load_uncached(self) -> NodeLoad:
         with self._slock:
             queue_depth = self._pending
             batch_inflight = self._batch_active
@@ -703,6 +751,27 @@ class NodeScheduler:
                     return True
             time.sleep(0.01)
         return False
+
+    def quiesce(self, timeout: float = 60.0) -> bool:
+        """Block until every admitted invocation (queued + running) has
+        finished — the drain barrier: placement must already be stopped, or
+        new arrivals keep the node busy forever."""
+        deadline = time.monotonic() + timeout
+        while time.monotonic() < deadline:
+            with self._slock:
+                if self._pending == 0:
+                    return True
+            time.sleep(0.005)
+        return False
+
+    def warm_instances(self) -> List[FunctionInstance]:
+        """WARM/WARMING instances, unsorted (drain/handoff enumeration)."""
+        with self._ilock:
+            insts = list(self._instances.values())
+        return [
+            i for i in insts
+            if i.state in (InstanceState.WARM, InstanceState.WARMING)
+        ]
 
     def instance(self, fname: str) -> Optional[FunctionInstance]:
         with self._ilock:
@@ -818,6 +887,7 @@ class NodeScheduler:
             inst = self._instances.get(fname)
             if inst is None:
                 inst = self._instances[fname] = FunctionInstance(spec, cfg)
+                inst.on_transition = self._bump_load_epoch
             return inst
 
     def _invoke_inner(
@@ -829,6 +899,12 @@ class NodeScheduler:
         prompt, max_new_tokens = inv.prompt, inv.max_new_tokens
         mode = inv.mode
         spec = self.registry.get(fname)
+        if inv.jif_override is not None:
+            # warm-state handoff: restore THIS image (a delta of the live
+            # warm state against the function's own base) instead of the
+            # registered one; the override is per-invocation — later
+            # restores of the function read the registered image again
+            spec = dataclasses.replace(spec, jif_path=inv.jif_override)
         cfg = inv.cfg
         if cfg is None:
             # cfg-less invocations (speculative pre-warms) reuse the cfg the
