@@ -224,6 +224,61 @@ def scale_table(sc) -> str:
     return "\n".join(out)
 
 
+def rollout_table(ro) -> str:
+    """Markdown for the ``"rollout"`` key: per-regime latency and rollout
+    counters, the per-version delta economics, and the acceptance gates
+    (colocated p99, delta ratio, rollback warm/zero-read/byte-identity)."""
+    tr = ro.get("trace", {})
+    out = [
+        "#### Train→serve rollout pipeline "
+        f"({tr.get('functions', '?')} fns, {tr.get('arrivals', '?')} "
+        f"arrivals over {tr.get('duration_s', '?')} s on "
+        f"{ro.get('fleet_nodes', '?')} nodes; {ro.get('n_versions', '?')} "
+        f"versions published mid-flight at "
+        f"{ro.get('canary_fraction', 0):.0%} canary)",
+        "",
+        "| regime | p50 ttft (ms) | p99 ttft (ms) | cold | warm | versions |"
+        " train steps | rollback warm | audit fail |",
+        "|---|---|---|---|---|---|---|---|---|",
+    ]
+    regimes = ro.get("regimes", {})
+    order = ("serve_only", "colocated")
+    for rname in [r for r in order if r in regimes] + sorted(
+        set(regimes) - set(order)
+    ):
+        r = regimes[rname]
+
+        def ms(v):
+            return "—" if v is None else f"{v*1e3:.2f}"
+        rb = r.get("rollback", {})
+        out.append(
+            f"| {rname} | {ms(r.get('latency_ttft_p50_s'))} | "
+            f"{ms(r.get('latency_ttft_p99_s'))} | {r['cold']} | {r['warm']} | "
+            f"{r.get('versions_published', '?')} | "
+            f"{r.get('trainer', {}).get('steps', '—')} | "
+            f"{'Y' if rb.get('served_warm') else 'n/a' if rb.get('skipped') else 'N'} | "
+            f"{r.get('audit_failures', '?')} |"
+        )
+    p99 = ro.get("p99_colocated_vs_serve_only")
+    if p99 is not None:
+        first = ro.get("publish_to_first_canary_serve_mean_s")
+        rb_s = ro.get("rollback_s")
+        out.append("")
+        out.append(
+            f"colocated p99 / serve-only = **{p99:.3f}x** (must be <=1.5); "
+            f"max per-version delta **{ro.get('delta_bytes_max_ratio', 0):.3f}x** "
+            f"full image (must be <=0.5); publish→first-canary-serve "
+            f"**{'—' if first is None else f'{first*1e3:.0f} ms'}**; rollback "
+            f"**{'—' if rb_s is None else f'{rb_s*1e6:.0f} us'}** pointer move, "
+            f"byte-identical: **{ro.get('rollback_byte_identical')}**, zero new "
+            f"reads: **{ro.get('rollback_zero_new_reads')}**"
+        )
+    if ro.get("error"):
+        out.append(f"**SCENARIO FAILED**: {ro['error']}")
+    out.append("")
+    return "\n".join(out)
+
+
 def coldstart_tables(d) -> str:
     """Markdown for BENCH_coldstart.json: per-mode TTFT, delta economics,
     memory-pressure high-water marks, and the cluster placement table."""
@@ -398,6 +453,9 @@ def coldstart_tables(d) -> str:
     sc = d.get("scale")
     if sc:
         out.append(scale_table(sc))
+    ro = d.get("rollout")
+    if ro:
+        out.append(rollout_table(ro))
     return "\n".join(out) if out else "_no BENCH_coldstart.json data_"
 
 
@@ -407,7 +465,7 @@ def main():
     ap.add_argument(
         "--section", default="all",
         choices=["dryrun", "roofline", "coldstart", "dedup", "prewarm",
-                 "scale", "both", "all"],
+                 "scale", "rollout", "both", "all"],
     )
     args = ap.parse_args()
     cells = load(args.tag)
@@ -455,6 +513,16 @@ def main():
             print(scale_table(sc))
         else:
             print("_no scale data — run benchmarks.run --only scale first_")
+    if args.section == "rollout":
+        print("### Rollout-pipeline table\n")
+        ro = (
+            json.loads(COLDSTART.read_text()).get("rollout")
+            if COLDSTART.exists() else None
+        )
+        if ro:
+            print(rollout_table(ro))
+        else:
+            print("_no rollout data — run benchmarks.run --only rollout first_")
 
 
 if __name__ == "__main__":

@@ -1,0 +1,516 @@
+"""Train→serve continuous-delta rollout benchmark.
+
+A seeded production trace (zipf popularity, diurnal swing, LATENCY flash
+crowds — ``benchmarks.common.generate_trace``) replays open-loop against a
+small fleet while a fine-tune publishes new versions of the most popular
+function **mid-flight** through the full pipeline: ``CheckpointManager.save``
+→ ``DeltaPublishCallback`` → ``RolloutController.publish_version`` →
+``begin_canary`` → gate → promote.  Two regimes over identical traces:
+
+* ``serve_only`` — the fine-tune's training compute runs off-fleet (a
+  dedicated trainer box); only the publishes touch the serving tier.
+* ``colocated``  — every training step is admitted onto the serving fleet
+  as a BATCH payload invocation (:class:`ColocatedTrainer`), contending
+  with live traffic under the admission caps.
+
+After replay each regime measures the rollback story: one pointer move,
+then the logical name serves the parent version warm — zero new storage
+reads — and a fresh restore of what now serves is byte-identical to the
+reference state; retired versions GC down to a clean CAS audit.
+
+Asserted (the PR's acceptance bar): colocated LATENCY p99 <= 1.5x
+serve-only; every version's publish wrote <= 0.5x the full image in new
+bytes; rollback served warm with zero reads and byte-identical state; all
+ledger + CAS audits clean.  Merges into ``BENCH_coldstart.json`` under
+``"rollout"``.
+"""
+from __future__ import annotations
+
+import tempfile
+import threading
+import time
+
+import numpy as np
+
+from benchmarks.common import PROMPT, TraceSpec, generate_trace, smoke
+
+BENCH_TARGET = "coldstart"
+SUMMARY_KEY = "rollout"
+SUMMARY: dict = {}
+
+SIM_READ_BW = 1.5e8
+
+
+def _smoke() -> bool:
+    return smoke()
+
+
+def _params():
+    if _smoke():
+        return {
+            "n_functions": 4,
+            "duration_s": 6.0,
+            "base_rps": 6.0,
+            "flash_crowds": 1,
+            "flash_rps": 8.0,
+            "flash_duration_s": 1.0,
+            "nodes": 2,
+            "n_versions": 2,
+            "steps_per_version": 2,
+            "train_step_ms": 25.0,
+            "canary_fraction": 0.5,
+            "ft_start_s": 1.0,
+        }
+    return {
+        "n_functions": 6,
+        "duration_s": 14.0,
+        "base_rps": 8.0,
+        "flash_crowds": 2,
+        "flash_rps": 12.0,
+        "flash_duration_s": 1.5,
+        "nodes": 3,
+        "n_versions": 3,
+        "steps_per_version": 3,
+        "train_step_ms": 40.0,
+        "canary_fraction": 0.5,
+        "ft_start_s": 2.0,
+    }
+
+
+def _cfg():
+    import dataclasses
+
+    from repro.configs import get_config
+
+    cfg = get_config("qwen1.5-0.5b").reduced()
+    if not _smoke():
+        cfg = dataclasses.replace(
+            cfg, pattern_reps=6, n_layers=6, d_model=256, d_ff=512, head_dim=32
+        )
+    return cfg
+
+
+def _tuned(cfg, params, scale: float):
+    """The repo's standard partial fine-tune: dirty the top ~40% of the
+    stacked layers + final_norm, leaving the rest byte-identical to the
+    base — the delta publish pays for roughly that fraction only."""
+    import jax
+
+    params = dict(params)
+    params["pattern"] = list(params["pattern"])
+    params["final_norm"] = params["final_norm"] + scale
+
+    def bump(a):
+        a = np.asarray(a)
+        if a.ndim >= 1 and a.shape[0] == cfg.pattern_reps:
+            cut = int(cfg.pattern_reps * 0.6)
+            a = a.copy()
+            a[cut:] = a[cut:] * (1.0 + scale)
+        return a
+
+    for pi in range(len(cfg.pattern)):
+        params["pattern"][pi] = jax.tree.map(bump, params["pattern"][pi])
+    return params
+
+
+_SPIN = np.ones((96, 96), np.float32)
+
+
+def _train_compute(ms: float) -> float:
+    """~ms of real CPU — the stand-in for one training micro-step."""
+    t_end = time.perf_counter() + ms / 1e3
+    acc = 0.0
+    while time.perf_counter() < t_end:
+        acc += float(np.dot(_SPIN, _SPIN)[0, 0])
+    return acc
+
+
+def _make_node_factory(catalog, store):
+    from repro.core import NodeChunkCache
+    from repro.serve.invocation import AdmissionController
+    from repro.serve.node import FixedTTLPolicy, NodeScheduler
+
+    def factory(name: str):
+        return NodeScheduler(
+            registry=catalog.registry,
+            name=name,
+            max_workers=8,
+            keepalive=FixedTTLPolicy(3600.0),
+            admission=AdmissionController(max_queue_depth=96,
+                                          max_batch_queued=16,
+                                          max_batch_inflight=2),
+            chunks=NodeChunkCache(store, node=name),
+        )
+
+    return factory
+
+
+def _replay(router, trace, cfg):
+    """Open-loop replay: sleep to each arrival, submit, never wait."""
+    from repro.serve.invocation import (
+        DeadlineExceeded,
+        Invocation,
+        Overloaded,
+        QosClass,
+    )
+
+    handles = []
+    rejected = 0
+    t0 = time.perf_counter()
+    for t_arr, qos_name, fname in trace:
+        delay = t_arr - (time.perf_counter() - t0)
+        if delay > 0:
+            time.sleep(delay)
+        inv = Invocation(function=fname, prompt=PROMPT, max_new_tokens=2,
+                         cfg=cfg, simulate_read_bw=SIM_READ_BW,
+                         qos=QosClass(qos_name))
+        try:
+            handles.append((QosClass(qos_name), router.submit_invocation(inv)))
+        except (Overloaded, DeadlineExceeded):
+            rejected += 1
+    return handles, rejected, time.perf_counter() - t0
+
+
+class _FineTune:
+    """The mid-flight fine-tune: trains (inline or via the colocated
+    trainer), checkpoints, and lets the publish callback drive the staged
+    rollout.  Runs on its own thread; errors are captured, not swallowed."""
+
+    def __init__(self, deploy, router, cfg, fname, base_params, p, trainer):
+        self.deploy = deploy
+        self.router = router
+        self.cfg = cfg
+        self.fname = fname
+        self.base_params = base_params
+        self.p = p
+        self.trainer = trainer
+        self.records = []
+        self.tuned_by_version = {}
+        self.first_canary_serve_s = []
+        self.gate_verdicts = []
+        self.error = None
+
+    def run(self):
+        try:
+            self._run()
+        except BaseException as exc:  # noqa: BLE001 — reported in SUMMARY
+            self.error = repr(exc)
+
+    def _run(self):
+        from repro.ft.manager import CheckpointManager
+        from repro.ft.publish import DeltaPublishCallback
+        from repro.serve.deploy import TokenHealthGate
+        from repro.serve.invocation import Overloaded
+
+        p, cfg = self.p, self.cfg
+        time.sleep(p["ft_start_s"])  # let baseline traffic establish
+        with tempfile.TemporaryDirectory() as ckpt_dir:
+            cb = DeltaPublishCallback(
+                self.deploy, self.fname, cfg, every=1,
+                canary_fraction=p["canary_fraction"],
+            )
+            mgr = CheckpointManager(ckpt_dir, async_save=False,
+                                    callbacks=[cb])
+            for v in range(p["n_versions"]):
+                for _ in range(p["steps_per_version"]):
+                    if self.trainer is not None:
+                        self.trainer.step(_train_compute, p["train_step_ms"])
+                    else:
+                        _train_compute(p["train_step_ms"])
+                tuned = _tuned(cfg, self.base_params, 0.01 * (v + 1))
+                t_pub = time.perf_counter()
+                mgr.save(v, {"params": tuned}, blocking=True)
+                rec = cb.published[-1]
+                self.tuned_by_version[rec.version] = tuned
+                # publish -> first canary serve: invoke the LOGICAL name
+                # until the A/B split hands us the new version
+                first = None
+                deadline = time.perf_counter() + 30.0
+                while time.perf_counter() < deadline:
+                    r = self.router.invoke(
+                        self.fname, PROMPT, max_new_tokens=2, cfg=cfg,
+                        simulate_read_bw=SIM_READ_BW,
+                    )
+                    if r.function == rec.name:
+                        first = time.perf_counter() - t_pub
+                        break
+                self.first_canary_serve_s.append(first)
+                while True:
+                    try:
+                        ok = self.deploy.evaluate_canary(
+                            self.fname, PROMPT,
+                            gate=TokenHealthGate(vocab_size=cfg.vocab_size),
+                            n_probes=2, max_new_tokens=2, cfg=cfg,
+                        )
+                        break
+                    except Overloaded:
+                        # the batch lane is full of serving work: gate
+                        # probes yield and retry, admission never bends
+                        time.sleep(0.02)
+                self.gate_verdicts.append(ok)
+            mgr.wait()
+            self.records = list(cb.published)
+
+
+def _rollback_probe(deploy, router, cfg, ft, fname, base_params) -> dict:
+    """Instant rollback, measured: pointer-move latency, then the logical
+    name must serve the parent WARM (zero storage reads), and a fresh
+    restore of what now serves must be byte-identical to the reference."""
+    import jax
+
+    from repro.core import SpiceRestorer
+    from repro.serve.instance import layerwise_state
+
+    cur = deploy.current(fname)
+    if cur.parent is None:
+        return {"skipped": True}
+    t0 = time.perf_counter()
+    back = deploy.rollback(fname)
+    rollback_s = time.perf_counter() - t0
+    r = router.invoke(fname, PROMPT, max_new_tokens=2, cfg=cfg,
+                      simulate_read_bw=SIM_READ_BW)
+    ref_params = (base_params if back.version == 1
+                  else ft.tuned_by_version[back.version])
+    state, _, _, _ = SpiceRestorer().restore(back.jif_path)
+    ref = layerwise_state(cfg, ref_params)
+    flat_a, _ = jax.tree.flatten(ref)
+    flat_b, _ = jax.tree.flatten(state)
+    identical = len(flat_a) == len(flat_b) and all(
+        np.array_equal(np.asarray(a), np.asarray(b))
+        for a, b in zip(flat_a, flat_b)
+    )
+    return {
+        "skipped": False,
+        "rolled_back_to": back.name,
+        "rollback_s": rollback_s,
+        "served_version": r.function,
+        "served_warm": bool(not r.cold),
+        "zero_new_reads": bool(r.stats is None),
+        "byte_identical": bool(identical),
+    }
+
+
+def _run_regime(regime, cfg, trace, p, dirpath) -> dict:
+    import jax
+    import jax.numpy as jnp
+
+    from repro.core import ChunkStore
+    from repro.models import lm
+    from repro.serve.cluster import ClusterRouter, FunctionCatalog, LocalityFirst
+    from repro.serve.deploy import ColocatedTrainer, RolloutController
+    from repro.serve.invocation import QosClass
+
+    d = f"{dirpath}/{regime}"
+    store = ChunkStore(f"{d}/cas")
+    catalog = FunctionCatalog(chunk_store=store)
+    fnames = [f"fn-{i}" for i in range(p["n_functions"])]
+    zoo = {}
+    for i, fname in enumerate(fnames):
+        params = lm.init_params(cfg, jax.random.PRNGKey(500 + i), jnp.float32)
+        catalog.publish(fname, cfg, params, d, warm_ttl_s=3600.0,
+                        formats=("jif",))
+        zoo[fname] = params
+
+    factory = _make_node_factory(catalog, store)
+    nodes = [factory(f"{regime}-n{i}") for i in range(p["nodes"])]
+    router = ClusterRouter(catalog, nodes, placement=LocalityFirst(),
+                           latency_spill_depth=3,
+                           interconnect_bw=4 * SIM_READ_BW)
+    deploy = RolloutController(catalog, seed=17, dirpath=d).attach(router)
+    target = fnames[0]  # the zipf head: versions roll out under real load
+    trainer = (ColocatedTrainer(router, job_name="ft")
+               if regime == "colocated" else None)
+    ft = _FineTune(deploy, router, cfg, target, zoo[target], p, trainer)
+    try:
+        th = threading.Thread(target=ft.run, daemon=True)
+        th.start()
+        handles, rejected, span_s = _replay(router, trace, cfg)
+        results = []
+        failed = 0
+        for qos, h in handles:
+            try:
+                results.append((qos, h.result(120)))
+            except Exception:
+                failed += 1
+        th.join(120)
+        router.drain_residual()
+
+        probe = _rollback_probe(deploy, router, cfg, ft, target, zoo[target])
+        retired = deploy.gc_retired(target)
+
+        audit_failures = 0
+        try:
+            store.audit()
+        except AssertionError:
+            audit_failures += 1
+        for n in router.nodes:
+            try:
+                n.memory.audit()
+            except AssertionError:
+                audit_failures += 1
+    finally:
+        router.close()
+
+    lat = [r.queue_wait_s + r.ttft_s for q, r in results
+           if q is QosClass.LATENCY]
+    out = {
+        "submitted": len(handles) + rejected,
+        "rejected": rejected,
+        "failed": failed,
+        "cold": sum(1 for _, r in results if r.cold and not r.joined),
+        "warm": sum(1 for _, r in results if not r.cold),
+        "span_s": span_s,
+        "latency_ttft_p50_s": float(np.percentile(lat, 50)) if lat else None,
+        "latency_ttft_p99_s": float(np.percentile(lat, 99)) if lat else None,
+        "ft_error": ft.error,
+        "gate_verdicts": ft.gate_verdicts,
+        "versions_published": len(ft.records),
+        "version_bytes": [
+            {"name": r.name, "step": r.step,
+             "private_bytes": r.private_bytes, "total_bytes": r.total_bytes}
+            for r in ft.records
+        ],
+        "publish_to_first_canary_serve_s": ft.first_canary_serve_s,
+        "rollout_stats": dict(deploy.stats),
+        "rollback": probe,
+        "retired": retired,
+        "audit_failures": audit_failures,
+    }
+    if trainer is not None:
+        out["trainer"] = dict(trainer.stats)
+    return out
+
+
+def run() -> list:
+    from repro.serve.node import NodeScheduler
+
+    cfg = _cfg()
+    p = _params()
+    rows: list = []
+    SUMMARY.clear()
+
+    with tempfile.TemporaryDirectory() as d:
+        # compile-cache warmup on a throwaway publish + node (shared jit cache)
+        import jax
+        import jax.numpy as jnp
+
+        from repro.models import lm
+        from repro.serve.cluster import FunctionCatalog
+
+        warm_catalog = FunctionCatalog()
+        warm_catalog.publish(
+            "warmup", cfg,
+            lm.init_params(cfg, jax.random.PRNGKey(1), jnp.float32),
+            d, formats=("jif",),
+        )
+        NodeScheduler(registry=warm_catalog.registry).invoke(
+            "warmup", PROMPT, max_new_tokens=2, mode="spice_sync", cfg=cfg
+        )
+
+        trace = generate_trace(TraceSpec(
+            functions=tuple(f"fn-{i}" for i in range(p["n_functions"])),
+            duration_s=p["duration_s"],
+            base_rps=p["base_rps"],
+            flash_crowds=p["flash_crowds"],
+            flash_rps=p["flash_rps"],
+            flash_duration_s=p["flash_duration_s"],
+            seed=42,
+        ))
+
+        regimes = {}
+        for regime in ("serve_only", "colocated"):
+            regimes[regime] = _run_regime(regime, cfg, trace, p, d)
+
+    serve = regimes["serve_only"]
+    coloc = regimes["colocated"]
+    p99_ratio = (
+        coloc["latency_ttft_p99_s"] / max(serve["latency_ttft_p99_s"], 1e-12)
+    )
+    audit_failures = sum(r["audit_failures"] for r in regimes.values())
+    all_versions = serve["version_bytes"] + coloc["version_bytes"]
+    delta_ratios = [
+        v["private_bytes"] / max(v["total_bytes"], 1)
+        for v in all_versions
+    ]
+    first_serve = [
+        s for r in regimes.values()
+        for s in r["publish_to_first_canary_serve_s"] if s is not None
+    ]
+
+    SUMMARY.update({
+        "trace": {
+            "functions": p["n_functions"],
+            "arrivals": len(trace),
+            "duration_s": p["duration_s"],
+            "base_rps": p["base_rps"],
+            "seed": 42,
+        },
+        "fleet_nodes": p["nodes"],
+        "n_versions": p["n_versions"],
+        "canary_fraction": p["canary_fraction"],
+        "sim_read_bw": SIM_READ_BW,
+        "regimes": regimes,
+        "p99_colocated_vs_serve_only": p99_ratio,
+        "delta_bytes_max_ratio": max(delta_ratios) if delta_ratios else None,
+        "publish_to_first_canary_serve_mean_s": (
+            float(np.mean(first_serve)) if first_serve else None
+        ),
+        "rollback_s": coloc["rollback"].get("rollback_s"),
+        "rollback_byte_identical": bool(
+            serve["rollback"].get("byte_identical")
+            and coloc["rollback"].get("byte_identical")
+        ),
+        "rollback_zero_new_reads": bool(
+            serve["rollback"].get("zero_new_reads")
+            and coloc["rollback"].get("zero_new_reads")
+        ),
+        "audit_failures": audit_failures,
+    })
+
+    for name, r in regimes.items():
+        rows.append((f"rollout/{name}_latency_p99",
+                     (r["latency_ttft_p99_s"] or 0) * 1e6, ""))
+        rows.append((f"rollout/{name}_versions",
+                     float(r["versions_published"]), "published mid-flight"))
+    rows.append(("rollout/p99_colocated_vs_serve_only", p99_ratio,
+                 "x (must be <=1.5)"))
+    rows.append(("rollout/delta_bytes_max_ratio",
+                 max(delta_ratios) if delta_ratios else 0.0,
+                 "of full image (must be <=0.5)"))
+    if first_serve:
+        rows.append(("rollout/publish_to_first_canary_serve",
+                     float(np.mean(first_serve)) * 1e6, "mean"))
+    if coloc["rollback"].get("rollback_s") is not None:
+        rows.append(("rollout/rollback",
+                     coloc["rollback"]["rollback_s"] * 1e6, "pointer move"))
+
+    # ---- the PR's acceptance bar, enforced where the numbers are made ----
+    for r in regimes.values():
+        assert r["ft_error"] is None, f"fine-tune thread died: {r['ft_error']}"
+        assert r["versions_published"] == p["n_versions"]
+        assert all(r["gate_verdicts"]), (
+            f"quality gate rejected a healthy canary: {r['gate_verdicts']}"
+        )
+    assert audit_failures == 0, "ledger/CAS audit failed under rollout"
+    assert delta_ratios and max(delta_ratios) <= 0.5, (
+        f"a version's publish wrote {max(delta_ratios):.2f}x the full image "
+        f"in new bytes (must be <=0.5x: deltas, not copies)"
+    )
+    for name, r in regimes.items():
+        pr = r["rollback"]
+        assert not pr.get("skipped"), f"{name}: no promote -> nothing to roll back"
+        assert pr["served_version"] == pr["rolled_back_to"]
+        assert pr["served_warm"] and pr["zero_new_reads"], (
+            f"{name}: rollback paid a restore: {pr}"
+        )
+        assert pr["byte_identical"], (
+            f"{name}: post-rollback state diverged from the parent snapshot"
+        )
+    assert len(first_serve) >= 1, "no canary ever served after publish"
+    assert coloc["trainer"]["steps"] == p["n_versions"] * p["steps_per_version"]
+    assert p99_ratio <= 1.5, (
+        f"colocated LATENCY p99 {coloc['latency_ttft_p99_s']:.4f}s must be "
+        f"<= 1.5x serve-only {serve['latency_ttft_p99_s']:.4f}s "
+        f"(got {p99_ratio:.2f}x)"
+    )
+    return rows

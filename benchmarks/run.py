@@ -12,6 +12,10 @@ Prints ``name,us_per_call,derived`` CSV. Module map:
                        over 3 nodes, CAS on vs off; merged into
                        BENCH_coldstart.json under "dedup"
   qos               -> Invocation API v2: LATENCY vs BATCH open-loop mix
+  rollout           -> train->serve continuous-delta pipeline: mid-flight
+                       versioned publishes, canary/promote/rollback,
+                       serve/train colocation; merged into
+                       BENCH_coldstart.json under "rollout"
   restore_bandwidth -> device-restore fast path (upload stream + overlay
                        patch) vs the storage roofline; merged into
                        BENCH_coldstart.json under "device_restore"
@@ -46,6 +50,7 @@ MODULES = [
     "qos",
     "prewarm",
     "scale",
+    "rollout",
     "restore_bandwidth",
     "roofline",
 ]

@@ -14,7 +14,7 @@ import os
 import threading
 import time
 from pathlib import Path
-from typing import Any, Dict, List, Optional, Tuple
+from typing import Any, Dict, List, Optional, Sequence, Tuple
 
 import jax
 import numpy as np
@@ -28,6 +28,13 @@ def _to_numpy(state):
 
 
 class CheckpointManager:
+    """``callbacks`` run after every completed save (on the save thread in
+    async mode) with ``cb.on_checkpoint(manager, step, state_np, entry)``
+    where ``entry`` is the just-appended :attr:`history` record — the hook
+    the train→serve deployment pipeline publishes through
+    (:class:`repro.ft.publish.DeltaPublishCallback`).  A callback exception
+    fails the save exactly like a write error: captured and re-raised."""
+
     def __init__(
         self,
         directory: str,
@@ -35,6 +42,7 @@ class CheckpointManager:
         anchor_every: int = 4,  # every k-th checkpoint is a full anchor
         page_size: int = DEFAULT_PAGE,
         async_save: bool = True,
+        callbacks: Sequence[Any] = (),
     ):
         self.dir = Path(directory)
         self.dir.mkdir(parents=True, exist_ok=True)
@@ -42,28 +50,45 @@ class CheckpointManager:
         self.anchor_every = anchor_every
         self.page_size = page_size
         self.async_save = async_save
+        self.callbacks: List[Any] = list(callbacks)
         self.cache = NodeImageCache(capacity_bytes=32 << 30)
         self._anchor_name: Optional[str] = None
         self._n_saved = 0
         self._pending: Optional[threading.Thread] = None
+        # a daemon-thread save that died must not die silently: the failure
+        # is parked here and re-raised at the next wait()/save() on the
+        # training thread, where the loop can actually react to it
+        self._save_error: Optional[BaseException] = None
         self.history: List[Dict] = []
 
     # ----------------------------------------------------------------- save
     def save(self, step: int, state, blocking: bool = False) -> None:
         state_np = _to_numpy(state)  # device->host copy on the caller
-        self.wait()  # one in-flight async save at a time
+        self.wait()  # one in-flight async save at a time; raises its error
         if self.async_save and not blocking:
             self._pending = threading.Thread(
-                target=self._save_sync, args=(step, state_np), daemon=True
+                target=self._save_guarded, args=(step, state_np), daemon=True
             )
             self._pending.start()
         else:
             self._save_sync(step, state_np)
 
     def wait(self) -> None:
+        """Join any in-flight async save and surface its failure: an
+        exception raised on the save thread (snapshot write, GC, or a
+        publish callback) re-raises HERE, on the caller's thread."""
         if self._pending is not None:
             self._pending.join()
             self._pending = None
+        error, self._save_error = self._save_error, None
+        if error is not None:
+            raise error
+
+    def _save_guarded(self, step: int, state_np) -> None:
+        try:
+            self._save_sync(step, state_np)
+        except BaseException as exc:  # noqa: BLE001 — re-raised at wait()
+            self._save_error = exc
 
     def _save_sync(self, step: int, state_np) -> None:
         t0 = time.perf_counter()
@@ -95,6 +120,9 @@ class CheckpointManager:
         )
         (self.dir / "MANIFEST.json").write_text(json.dumps(self.history, indent=1))
         self._gc()
+        entry = self.history[-1]
+        for cb in self.callbacks:
+            cb.on_checkpoint(self, step, state_np, entry)
 
     def _gc(self) -> None:
         """keep-k GC that never breaks a delta chain: a delta is only

@@ -43,6 +43,7 @@ cluster benchmark (``benchmarks/cluster.py``) compares against.
 """
 from __future__ import annotations
 
+import dataclasses
 import os
 import threading
 from typing import Any, Dict, List, Optional, Sequence, Tuple
@@ -123,6 +124,9 @@ class FunctionCatalog:
         # fname -> published manifest (one store ref per chunk occurrence;
         # a republish/relayout returns the OLD manifest's refs)
         self._chunk_manifests: Dict[str, List[bytes]] = {}
+        # fname -> SnapshotStats of its last publish (delta economics feed
+        # for the deployment pipeline: private_bytes vs total_bytes)
+        self._publish_stats: Dict[str, SnapshotStats] = {}
         self._handoff_seq = 0  # unique handoff image names (per catalog)
         self.stats = {
             "publishes": 0,
@@ -225,7 +229,7 @@ class FunctionCatalog:
                 # in the JIF it streams as residual behind the ws boundary
                 full_state = dict(state)
                 full_state["__extra__"] = extra_state
-            snapshot(
+            stats = snapshot(
                 full_state,
                 jif_path,
                 base=base,
@@ -235,6 +239,8 @@ class FunctionCatalog:
                 meta={"arch": cfg.name, "function": name},
                 memory=memory,
             )
+            with self._lock:
+                self._publish_stats[name] = stats
             self._ingest_chunks(name, jif_path)
         if "criu" in formats:
             baselines.criu_star_snapshot(state, f"{dirpath}/{name}.criu")
@@ -248,6 +254,37 @@ class FunctionCatalog:
         )
         self.registry.register(spec)
         self._bump("publishes")
+        return spec
+
+    def publish_stats(self, name: str) -> Optional[SnapshotStats]:
+        """SnapshotStats of ``name``'s last JIF publish (None before any):
+        ``private_bytes`` is what the publish actually cost in new storage —
+        the per-version delta economics the rollout pipeline reports."""
+        with self._lock:
+            return self._publish_stats.get(name)
+
+    def unpublish(self, name: str, unlink: bool = False) -> Optional[FunctionSpec]:
+        """Retire a published function: release its CAS manifest refs
+        (chunks no other image references are unlinked from the store),
+        drop the catalog's bookkeeping, and unregister the spec.  With
+        ``unlink=True`` the JIF file itself is deleted — the CALLER
+        guarantees no live delta child still chains to it on disk (the
+        rollout controller refuses to retire a version with live
+        descendants for exactly this reason).  Returns the retired spec,
+        or None if the name was never registered."""
+        with self._lock:
+            manifest = self._chunk_manifests.pop(name, None)
+            self._publish_stats.pop(name, None)
+            self._recorded.pop(name, None)
+            self._locality.pop(name, None)
+        if manifest and self.chunk_store is not None:
+            self.chunk_store.release_many(manifest)
+        spec = self.registry.unregister(name)
+        if unlink and spec is not None:
+            try:
+                os.unlink(spec.jif_path)
+            except OSError:
+                pass
         return spec
 
     # ------------------------------------------------------------- locality
@@ -645,6 +682,10 @@ class ClusterRouter:
         self.prewarm = prewarm
         if prewarm is not None:
             prewarm.attach(self)
+        # staged-rollout resolver (repro.serve.deploy.RolloutController):
+        # rewrites a logical function name to the stable/canary version
+        # name per invocation, BEFORE placement — set by its attach()
+        self.deploy = None
 
     def _wire_node_chunks(self, node: NodeScheduler) -> None:
         """Connect one node's chunk cache to the cluster: residency
@@ -858,11 +899,28 @@ class ClusterRouter:
         node (typed ``Overloaded`` / ``DeadlineExceeded`` raise here)."""
         if self._closed:
             raise Overloaded("router is closed")
-        if self.prewarm is not None and not inv.prewarm:
+        if self.prewarm is not None and not inv.prewarm and inv.payload is None:
             # feed the arrival histogram BEFORE placement (arrival time is
             # submit time); the engine's own speculations never count as
-            # demand, or prediction would feed back on itself
+            # demand, or prediction would feed back on itself (colocated
+            # compute payloads are not function demand either)
             self.prewarm.on_arrival(inv.function)
+        if self.deploy is not None and inv.payload is None:
+            # staged rollout: the caller addresses the LOGICAL function;
+            # the controller's seeded A/B split picks the concrete version
+            # (stable or canary) this invocation serves.  Resolution runs
+            # AFTER the arrival feed (demand is per logical function) and
+            # BEFORE placement, so sticky routing, restore joining and
+            # warm hits all key on the version actually served.
+            resolved = self.deploy.resolve(inv.function)
+            if resolved != inv.function:
+                inv = dataclasses.replace(inv, function=resolved)
+        if inv.payload is not None:
+            # spec-less colocated compute: nothing to place by locality —
+            # run it where the queue is shallowest among active nodes
+            cands = self.active_nodes()
+            node = min(cands, key=lambda n: n.load().queue_depth)
+            return node.submit_invocation(inv)
         return self._pick(inv.function, inv).submit_invocation(inv)
 
     def submit(

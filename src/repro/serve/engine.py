@@ -63,6 +63,14 @@ from repro.serve.prewarm import (  # re-exported: the warmth policy engine
     PrewarmEngine,
     PrewarmPolicy,
 )
+from repro.serve.deploy import (  # re-exported: the deployment pipeline
+    ColocatedTrainer,
+    QualityGate,
+    RolloutController,
+    TokenHealthGate,
+    VersionedFunction,
+    VersionRecord,
+)
 
 __all__ = [
     "ServerlessNode",
@@ -96,6 +104,12 @@ __all__ = [
     "layerwise_state",
     "generate",
     "wait_tree",
+    "RolloutController",
+    "VersionedFunction",
+    "VersionRecord",
+    "QualityGate",
+    "TokenHealthGate",
+    "ColocatedTrainer",
 ]
 
 

@@ -146,6 +146,13 @@ class Invocation:
     # registered image.  Per-invocation: the registry is never touched, so
     # any later restore of the function reads the published image.
     jif_override: Optional[str] = None
+    # colocated compute lane (repro.serve.deploy.ColocatedTrainer): run
+    # this thunk on a worker instead of restore+generate.  The function
+    # name is a label (never resolved through the registry); admission
+    # caps, QoS run-queue order, deadlines and queued-cancel all apply —
+    # which is the point: BATCH-class training competes for the node
+    # under the same contract as BATCH invocations.
+    payload: Optional[Callable[[], Any]] = None
 
     def remaining_s(self, now: Optional[float] = None) -> Optional[float]:
         if self.deadline_s is None:

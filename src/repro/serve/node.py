@@ -344,6 +344,7 @@ class NodeScheduler:
             "cancellations": 0,
             "speculative_restores": 0,  # prewarm invocations that restored
             "prewarm_redundant": 0,     # prewarms finding warm/restoring state
+            "payload_runs": 0,          # colocated compute thunks executed
         }
         if reap_interval_s is not None:
             self.start_reaper(reap_interval_s)
@@ -898,6 +899,24 @@ class NodeScheduler:
         fname = inv.function
         prompt, max_new_tokens = inv.prompt, inv.max_new_tokens
         mode = inv.mode
+        if inv.payload is not None:
+            # colocated compute lane: no spec, no snapshot, no instance —
+            # the thunk runs on this worker after waiting its turn in the
+            # QoS-ordered queue under the admission caps (a BATCH payload
+            # parks behind LATENCY work and max_batch_inflight bounds its
+            # worker occupancy; that is the serve/train colocation contract)
+            t0 = time.perf_counter()
+            self._bump("invocations")
+            self._bump("payload_runs")
+            handle._pin()
+            handle.record(EVT_RUNNING)
+            out = inv.payload()
+            return InvokeResult(
+                _EMPTY_TOKENS, cold=False, mode="payload",
+                total_s=time.perf_counter() - t0, function=fname,
+                queue_s=t0 - t_submit, node=self.name,
+                stats=out if isinstance(out, dict) else None,
+            )
         spec = self.registry.get(fname)
         if inv.jif_override is not None:
             # warm-state handoff: restore THIS image (a delta of the live

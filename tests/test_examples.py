@@ -13,7 +13,7 @@ SRC = str(ROOT / "src")
 CASES = [
     ("quickstart.py", "COLD start"),
     ("overlay_finetunes.py", "base-image cache"),
-    ("train_ft.py", "resuming from step"),
+    ("train_ft.py", ("resuming from step", "canary", "instant rollback")),
     ("serve_coldstart.py", "node cache"),
 ]
 
@@ -27,4 +27,5 @@ def test_example_runs(script, needle):
         capture_output=True, text=True, timeout=900, env=env,
     )
     assert out.returncode == 0, out.stderr[-3000:]
-    assert needle in out.stdout
+    for n in (needle,) if isinstance(needle, str) else needle:
+        assert n in out.stdout, f"missing narrative {n!r}"

@@ -88,6 +88,49 @@ def test_async_save(tmp_path, setup):
     assert step == 7
 
 
+def test_async_save_failure_surfaces(tmp_path):
+    """Regression: a save that fails on the background thread must NOT be
+    silent — the error re-raises on the training thread at the next
+    save()/wait(), and is consumed exactly once."""
+    mgr = CheckpointManager(str(tmp_path / "ckpt"), async_save=True)
+    state = {"w": np.ones((8, 8), np.float32)}
+
+    def failing(step, state_np):
+        raise RuntimeError("disk full")
+
+    mgr._save_sync = failing
+    mgr.save(0, state)  # spawns the doomed background save
+    with pytest.raises(RuntimeError, match="disk full"):
+        mgr.save(1, state)  # the next save surfaces the pending failure
+    mgr.wait()  # consumed exactly once: wait() is clean again
+
+    with pytest.raises(RuntimeError, match="disk full"):
+        mgr.save(2, state)
+        mgr.wait()  # ... and wait() alone surfaces it too
+
+
+def test_checkpoint_callback_failure_fails_the_save(tmp_path):
+    """A publish callback raising on the save thread fails the save like a
+    checkpoint write error would — but the checkpoint itself (written
+    before callbacks fire) stays restorable."""
+
+    class BadCb:
+        def on_checkpoint(self, manager, step, state, entry):
+            raise ValueError("gate exploded")
+
+    mgr = CheckpointManager(
+        str(tmp_path / "ckpt"), async_save=True, callbacks=[BadCb()]
+    )
+    mgr.save(0, {"w": np.arange(16, dtype=np.float32)})
+    with pytest.raises(ValueError, match="gate exploded"):
+        mgr.wait()
+    restored, step = mgr.restore()
+    assert step == 0
+    np.testing.assert_array_equal(
+        restored["w"], np.arange(16, dtype=np.float32)
+    )
+
+
 def test_health_monitor():
     t = [0.0]
     mon = HealthMonitor(["h0", "h1", "h2"], heartbeat_timeout_s=5, clock=lambda: t[0])
